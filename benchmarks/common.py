@@ -1,0 +1,77 @@
+"""Shared benchmark fixtures: synthetic datasets at paper-like geometry and
+cached Proxima indexes (graph build is the slow offline phase)."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import numpy as np
+
+from repro.configs.base import (
+    DatasetConfig, GraphConfig, PQConfig, ProximaConfig, SearchConfig,
+)
+from repro.core import build_index
+from repro.core.dataset import make_dataset
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "results/bench_cache")
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+
+# paper datasets stood in at container-feasible scale (Table I geometry)
+_SPECS = {
+    "small": dict(num_base=4000, num_queries=64),
+    "full": dict(num_base=20000, num_queries=256),
+}
+
+DATASETS = {
+    "sift-like": dict(name="sift-like", dim=128, num_clusters=64,
+                      cluster_std=0.35, metric="l2"),
+    "glove-like": dict(name="glove-like", dim=100, num_clusters=64,
+                       cluster_std=0.35, metric="angular"),
+    "deep-like": dict(name="deep-like", dim=96, num_clusters=64,
+                      cluster_std=0.35, metric="ip"),
+}
+
+_PQ_M = {"sift-like": 32, "glove-like": 25, "deep-like": 32}
+
+
+def proxima_config(dataset: str, hot: float = 0.03,
+                   search: SearchConfig | None = None) -> ProximaConfig:
+    spec = dict(DATASETS[dataset])
+    spec.update(_SPECS[SCALE])
+    return ProximaConfig(
+        dataset=DatasetConfig(seed=7, **spec),
+        pq=PQConfig(num_subvectors=_PQ_M[dataset], num_centroids=256,
+                    kmeans_iters=8),
+        graph=GraphConfig(max_degree=32, build_list_size=64, alpha=1.2),
+        search=search or SearchConfig(k=10, list_size=128, t_init=16,
+                                      t_step=8, repetition_rate=2, beta=1.06),
+        hot_node_fraction=hot,
+    )
+
+
+def get_index(dataset: str, hot: float = 0.03):
+    """Build (or load cached) Proxima index for a benchmark dataset."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    key = f"{dataset}_{SCALE}_hot{hot}"
+    path = os.path.join(CACHE_DIR, key + ".pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    cfg = proxima_config(dataset, hot)
+    t0 = time.time()
+    idx = build_index(cfg, reorder_samples=64)
+    print(f"# built {key} in {time.time()-t0:.1f}s")
+    with open(path, "wb") as f:
+        pickle.dump(idx, f)
+    return idx
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """(result, us_per_call)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    return out, (time.time() - t0) / iters * 1e6

@@ -1,0 +1,59 @@
+"""Fig. 12 — Proxima NSP accelerator vs CPU / GPU / ASIC.
+
+The CPU row is MEASURED (this container, JAX search wall-clock). Proxima
+rows come from the NAND model driven by measured traces. GPU (GGNN on A40)
+and ASIC (ANNA) rows are the paper's own reported numbers, included as
+labelled reference constants — we cannot measure those devices here.
+Expected relations (paper): Proxima > GGNN > HNSW-CPU in QPS;
+Proxima ~ 6.6-13x ANNA; Proxima ~ 3 orders of magnitude over CPU in QPS/W.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.core import search
+from repro.nand.simulator import simulate, trace_from_search_result
+
+# paper-reported reference points (order-of-magnitude anchors, SIFT-class)
+PAPER_REFS = {
+    "ggnn-a40": dict(qps=3e5, qps_per_w=1e3),
+    "anna-asic": dict(qps=6e5, qps_per_w=4e4),
+}
+CPU_TDP_W = 225.0  # AMD EPYC 7543 (paper baseline hardware)
+
+
+def main(out=print) -> None:
+    ds = "sift-like"
+    idx = get_index(ds)
+    cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                       repetition_rate=2, beta=1.06)
+    q = idx.dataset.queries
+    corpus = idx.corpus()
+    res = search(corpus, q, cfg, idx.dataset.metric)
+    jax.block_until_ready(res.ids)
+    t0 = time.time()
+    res = search(corpus, q, cfg, idx.dataset.metric)
+    jax.block_until_ready(res.ids)
+    cpu_qps = q.shape[0] / (time.time() - t0)
+    out(f"fig12/{ds}/cpu-jax,{1e6/cpu_qps:.1f},qps={cpu_qps:.0f};"
+        f"qps_per_w={cpu_qps/CPU_TDP_W:.1f};measured=true")
+    tr = trace_from_search_result(
+        res, dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+        index_bits=idx.gap.bit_width if idx.gap else 32,
+        pq_bits=idx.codebook.num_subvectors * 8, metric=idx.dataset.metric)
+    r = simulate(tr)
+    out(f"fig12/{ds}/proxima-nsp,{r.latency_us:.1f},qps={r.qps:.0f};"
+        f"qps_per_w={r.qps_per_watt:.0f};speedup_vs_cpu={r.qps/cpu_qps:.0f}x;"
+        f"eff_vs_cpu={r.qps_per_watt/(cpu_qps/CPU_TDP_W):.0f}x")
+    for name, ref in PAPER_REFS.items():
+        out(f"fig12/{ds}/{name},0.0,qps={ref['qps']:.0f};"
+            f"qps_per_w={ref['qps_per_w']:.0f};source=paper_reported")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fig. 13 — graph algorithms on the Proxima NSP accelerator: HNSW,
+DiskANN-PQ, Proxima+G+E (gap encoding + early termination) and
+Proxima+G+E+H (+ hot node repetition), all simulated from REAL search
+traces through the 3D NAND model. Reports QPS, QPS/W, latency."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.core import search
+from repro.nand.simulator import simulate, trace_from_search_result
+
+
+def variant_traces(idx, metric):
+    corpus = idx.corpus()
+    q = idx.dataset.queries
+    d = idx.dataset.dim
+    r = idx.graph.max_degree
+    m = idx.codebook.num_subvectors
+    gap_bits = idx.gap.bit_width if idx.gap else 32
+    runs = {
+        "hnsw": (SearchConfig(k=10, list_size=128, use_pq=False,
+                              early_termination=False),
+                 dict(index_bits=32, use_pq=False, use_hot=False)),
+        "diskann-pq": (SearchConfig(k=10, list_size=128, beta=1.0,
+                                    early_termination=False),
+                       dict(index_bits=32, use_pq=True, use_hot=False)),
+        "proxima-GE": (SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                                    repetition_rate=2, beta=1.06),
+                       dict(index_bits=gap_bits, use_pq=True, use_hot=False)),
+        "proxima-GEH": (SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                                     repetition_rate=2, beta=1.06),
+                        dict(index_bits=gap_bits, use_pq=True, use_hot=True)),
+    }
+    out = {}
+    for name, (cfg, kw) in runs.items():
+        res = search(corpus, q, cfg, metric)
+        out[name] = trace_from_search_result(
+            res, dim=d, r_degree=r, pq_bits=m * 8, metric=metric, **kw
+        )
+    return out
+
+
+def main(out=print) -> None:
+    for ds in ("sift-like", "deep-like"):
+        idx = get_index(ds)
+        traces = variant_traces(idx, idx.dataset.metric)
+        base_qps = None
+        for name, tr in traces.items():
+            r = simulate(tr)
+            if base_qps is None:
+                base_qps = r.qps
+            out(f"fig13/{ds}/{name},{r.latency_us:.1f},"
+                f"qps={r.qps:.0f};qps_per_w={r.qps_per_watt:.0f};"
+                f"speedup_vs_hnsw={r.qps/base_qps:.2f}x;"
+                f"util={r.core_utilization:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Fig. 14 / Fig. 6-b — per-query memory-traffic breakdown (NN-index bytes,
+PQ-code bytes, raw-vector bytes) for HNSW, DiskANN-PQ, and Proxima with gap
+encoding + early termination. Validates the paper's 1.9-2.4x total traffic
+reduction vs HNSW and the 80-90% index-fetch share."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_index
+from benchmarks.fig13_ablation import variant_traces
+from repro.nand.simulator import _accesses_per_query
+from repro.nand.device import NandConfig
+
+
+def main(out=print) -> None:
+    nand = NandConfig()
+    for ds in ("sift-like", "glove-like"):
+        idx = get_index(ds)
+        traces = variant_traces(idx, idx.dataset.metric)
+        totals = {}
+        for name, tr in traces.items():
+            _, _, _, traffic = _accesses_per_query(tr, nand)
+            total = sum(traffic.values())
+            totals[name] = total
+            shares = ";".join(f"{k}={v/total:.2f}" for k, v in traffic.items())
+            out(f"fig14/{ds}/{name},{total:.0f},bytes_per_query;{shares}")
+        out(f"fig14/{ds}/reduction,{totals['hnsw']/totals['proxima-GE']:.2f},"
+            f"hnsw_over_proximaGE (paper: 1.9-2.4x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig. 15 — runtime breakdown vs hot-node percentage (0..7%). Re-runs the
+search with indexes reordered at each hot fraction and feeds the measured
+hot-hit counters through the NAND model. Paper: +1% -> 2.2x, 3% -> ~3x,
+plateau beyond 3%."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.core import search
+from repro.nand.simulator import simulate, trace_from_search_result
+
+
+def main(out=print) -> None:
+    ds = "sift-like"
+    base_lat = None
+    for hot in (0.0, 0.01, 0.03, 0.05, 0.07):
+        idx = get_index(ds, hot=hot)
+        cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                           repetition_rate=2, beta=1.06)
+        res = search(idx.corpus(), idx.dataset.queries, cfg,
+                     idx.dataset.metric)
+        tr = trace_from_search_result(
+            res, dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+            index_bits=idx.gap.bit_width if idx.gap else 32,
+            pq_bits=idx.codebook.num_subvectors * 8,
+            metric=idx.dataset.metric, use_hot=hot > 0,
+        )
+        r = simulate(tr)
+        if base_lat is None:
+            base_lat = r.latency_us
+        hot_rate = float(np.asarray(res.n_hot_hops).mean()
+                         / max(np.asarray(res.n_hops).mean(), 1))
+        bd = ";".join(f"{k}={v:.2f}" for k, v in r.breakdown.items())
+        out(f"fig15/hot{hot:.2f},{r.latency_us:.1f},"
+            f"speedup={base_lat/r.latency_us:.2f}x;hot_hit_rate={hot_rate:.2f};{bd}")
+
+    # paper-scale extrapolation: at 100M scale the reordered graph serves
+    # >80-90% of expansions from the hot set (our small corpora reach ~25%);
+    # replay the same per-query work with a 90% hot-hit trace to check the
+    # model reproduces the paper's ~3x claim under the paper's conditions
+    from repro.nand.simulator import WorkloadTrace
+    base = WorkloadTrace(hops=40, pq=210, acc=60, hot_hops=0, free_pq=0,
+                         rounds=40, dim=128, r_degree=64, index_bits=24,
+                         pq_bits=256)
+    hot90 = WorkloadTrace(**{**base.__dict__, "hot_hops": 36.0,
+                             "free_pq": 189.0})
+    r0, r9 = simulate(base), simulate(hot90)
+    out(f"fig15/synthetic-hit0.9,{r9.latency_us:.1f},"
+        f"speedup={r0.latency_us/r9.latency_us:.2f}x_vs_no_hot;"
+        f"paper_claim=~3x_at_their_hit_rates")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig. 16 — queue-size (N_q) sweep on the NAND model: throughput, energy
+efficiency and 3D-NAND core utilization for N_q in 32..512. Paper: 3.8x
+throughput gain at 256 queues, utilization 17.9% -> 68%, ~20% efficiency
+cost; saturation beyond 256."""
+from __future__ import annotations
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.core import search
+from repro.nand.simulator import simulate, trace_from_search_result
+
+
+def main(out=print) -> None:
+    idx = get_index("sift-like", hot=0.0)   # paper sweeps without hot nodes
+    cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                       repetition_rate=2, beta=1.06)
+    res = search(idx.corpus(), idx.dataset.queries, cfg, idx.dataset.metric)
+    tr = trace_from_search_result(
+        res, dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+        index_bits=idx.gap.bit_width if idx.gap else 32,
+        pq_bits=idx.codebook.num_subvectors * 8, metric=idx.dataset.metric,
+        use_hot=False,
+    )
+    base = None
+    for nq in (32, 64, 128, 256, 512):
+        r = simulate(tr, n_queues=nq)
+        if base is None:
+            base = r
+        out(f"fig16/Nq{nq},{r.latency_us:.1f},"
+            f"qps={r.qps:.0f};gain={r.qps/base.qps:.2f}x;"
+            f"util={r.core_utilization:.2f};"
+            f"qps_per_w_rel={r.qps_per_watt/base.qps_per_watt:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig. 17 — storage bit-error sensitivity: flip bits in the stored PQ codes
+and raw vectors at SLC/MLC/TLC-class rates and measure recall. Paper: SLC
+(<1e-5) loses <3% recall without ECC; MLC/TLC (>1e-4) degrade sharply.
+
+On TPU this doubles as a silent-data-corruption tolerance study (DESIGN.md
+§2) — the same injection, reinterpreted."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.core import recall_at_k, search
+from repro.core.search import Corpus
+import jax.numpy as jnp
+
+
+def flip_bits(arr: np.ndarray, rate: float, rng) -> np.ndarray:
+    raw = arr.view(np.uint8).copy()
+    n_bits = raw.size * 8
+    n_flip = rng.binomial(n_bits, rate)
+    if n_flip == 0:
+        return arr.copy()
+    pos = rng.integers(0, n_bits, size=n_flip)
+    np.bitwise_xor.at(raw.reshape(-1), pos // 8,
+                      (1 << (pos % 8)).astype(np.uint8))
+    return raw.view(arr.dtype).reshape(arr.shape)
+
+
+def main(out=print) -> None:
+    idx = get_index("sift-like")
+    cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                       repetition_rate=2, beta=1.06)
+    rng = np.random.default_rng(3)
+    base = None
+    for rate in (0.0, 1e-6, 1e-5, 1e-4, 1e-3):
+        codes = flip_bits(idx.codes, rate, rng)
+        raw = flip_bits(idx._search_base().astype(np.float32), rate, rng)
+        # guard rerank against inf/nan from exponent flips (engine clamps)
+        raw = np.nan_to_num(raw, nan=0.0, posinf=1e6, neginf=-1e6)
+        corpus = idx.corpus()._replace(
+            codes=jnp.asarray(codes), base=jnp.asarray(raw)
+        )
+        res = search(corpus, idx.dataset.queries, cfg, idx.dataset.metric)
+        rec = recall_at_k(np.asarray(res.ids), idx.dataset.gt, 10)
+        if base is None:
+            base = rec
+        out(f"fig17/ber{rate:g},{0:.1f},recall={rec:.4f};delta={rec-base:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Fig. 9 — 3D NAND density/latency/area tradeoff sweep from the device
+model; the Proxima core design point (128B granularity, 64 blocks) must land
+< 300 ns while SSD-class pages land in the 10^4-10^5 ns range."""
+from __future__ import annotations
+
+from repro.nand.device import NandConfig
+
+
+def main(out=print) -> None:
+    nand = NandConfig()
+    out(f"fig9/proxima_core,{nand.read_latency_ns()/1e3:.3f},"
+        f"read_ns={nand.read_latency_ns():.0f};page_b={nand.page_bytes};"
+        f"capacity_gb={nand.capacity_bits/8/1e9:.0f}")
+    for row in nand.latency_density_tradeoff():
+        out(f"fig9/page{row['page_bytes']},{row['read_latency_ns']/1e3:.3f},"
+            f"latency_ns={row['read_latency_ns']:.0f};"
+            f"area_eff={row['area_efficiency']:.2f};blocks={row['n_block']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""§III-E — gap-encoding compression across graph scales. Paper: 1M-100M
+graphs need 20-26 bits -> >=19-37% index compression vs uniform 32-bit."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.gap_encoding import gap_encode
+from repro.configs.base import DatasetConfig, GraphConfig
+from repro.core.dataset import make_dataset
+from repro.core.graph import build_graph
+
+
+def main(out=print) -> None:
+    for n in (1000, 4000, 16000):
+        ds = make_dataset(DatasetConfig(
+            name="sift-like", num_base=n, num_queries=8, dim=64,
+            num_clusters=32, cluster_std=0.35, seed=1))
+        g = build_graph(ds.base, GraphConfig(max_degree=32,
+                                             build_list_size=48), ds.metric)
+        enc = gap_encode(g.adjacency)
+        # round-trip check inline (sorted adjacency semantics)
+        from repro.core.gap_encoding import gap_decode
+        dec = gap_decode(enc)
+        ok = bool((np.sort(g.adjacency.astype(np.int64), 1) == dec).all())
+        out(f"gap/n{n},{0:.1f},bits={enc.bit_width};"
+            f"compression={enc.compression_ratio:.2%};roundtrip={ok}")
+
+
+if __name__ == "__main__":
+    main()

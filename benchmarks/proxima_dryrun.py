@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Distributed Proxima search on the production mesh — the paper-technique
+roofline cell (§Perf hillclimb D-series).
+
+Lowers ``core.distributed.distributed_search`` (corpus round-robin over the
+16-way ``data`` axis = NAND cores; query batch over the 16-way ``model``
+axis = search queues) at 1M-vector scale with ShapeDtypeStructs, compiles,
+and parses per-round collective bytes for the two dataflows:
+
+  * mode="fetch": ship PQ CODES to the engine (DiskANN-on-a-host style)
+  * mode="nsp":   ship DISTANCES (the paper's near-storage insight)
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.proxima_dryrun
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(out=print) -> None:
+    from repro.configs.base import SearchConfig
+    from repro.core.distributed import ShardedCorpus, distributed_search
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import hlo_parse
+    from repro.roofline.analysis import ICI_BW
+
+    mesh = make_production_mesh()          # (data=16, model=16)
+    n, r, m, c, d = 1_000_000, 64, 32, 256, 128
+    q_global = 256
+    p = 16
+    hot = int(0.03 * n)
+    sds = jax.ShapeDtypeStruct
+    cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                       repetition_rate=2, beta=1.06, max_rounds=192)
+
+    def corpus_shapes(hot_count):
+        h = max(hot_count, 1)
+        return ShardedCorpus(
+            adjacency=sds((p, n // p, r), jnp.int32),
+            codes=sds((p, n // p, m), jnp.uint8),
+            base=sds((p, n // p, d), jnp.float32),
+            centroids=sds((m, c, d // m), jnp.float32),
+            hot_adjacency=sds((h, r), jnp.int32),
+            hot_codes=sds((h, m), jnp.uint8),
+            hot_base=sds((h, d), jnp.float32),
+            entry_point=sds((), jnp.int32),
+            hot_count=sds((), jnp.int32),
+            num_vertices=n,
+            num_shards=p,
+        )
+
+    queries = sds((q_global, d), jnp.float32)
+    results = {}
+    for mode in ("fetch", "nsp"):
+        lowered = distributed_search.lower(
+            corpus_shapes(hot), queries, cfg, "l2", mode=mode, mesh=mesh,
+        )
+        compiled = lowered.compile()
+        cost = hlo_parse.analyze_text(compiled.as_text())
+        per_round = cost.coll_bytes / cfg.max_rounds
+        per_query_round = per_round / (q_global / mesh.shape["model"])
+        coll_s = cost.coll_bytes / ICI_BW
+        results[mode] = dict(
+            coll_bytes_per_device=cost.coll_bytes,
+            per_round=per_round,
+            per_query_round=per_query_round,
+            collective_s=coll_s,
+            kinds={k: int(v) for k, v in cost.coll_by_kind.items()},
+        )
+        out(f"proxima-dist/{mode},{per_query_round:.0f},"
+            f"coll_bytes/dev={cost.coll_bytes:.3e};"
+            f"per_round={per_round:.0f};collective_s={coll_s:.4f}")
+    ratio = results["fetch"]["coll_bytes_per_device"] / max(
+        results["nsp"]["coll_bytes_per_device"], 1)
+    out(f"proxima-dist/nsp_gain,{0:.1f},fetch_over_nsp={ratio:.2f}x "
+        f"(paper's NSP thesis: move compute to the data)")
+    os.makedirs("results", exist_ok=True)
+    with open("results/proxima_dist.json", "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

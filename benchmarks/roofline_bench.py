@@ -1,0 +1,38 @@
+"""§Roofline — the dry-run roofline table (reads results/dryrun.json;
+run ``python -m repro.launch.dryrun`` first to (re)generate)."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def main(out=print) -> None:
+    path = os.environ.get("REPRO_DRYRUN_RESULTS", "results/dryrun.json")
+    if not os.path.exists(path):
+        out("roofline/missing,0.0,run `python -m repro.launch.dryrun` first")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    n_ok = n_skip = n_err = 0
+    for key, rec in sorted(results.items()):
+        if rec["status"] == "skipped":
+            n_skip += 1
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            out(f"roofline/{key.replace('|','/')},0.0,ERROR")
+            continue
+        n_ok += 1
+        rl = rec["roofline"]
+        dominant_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        out(
+            f"roofline/{key.replace('|','/')},{dominant_s*1e6:.1f},"
+            f"compute_s={rl['compute_s']:.4f};memory_s={rl['memory_s']:.4f};"
+            f"collective_s={rl['collective_s']:.4f};"
+            f"bottleneck={rl['bottleneck']};useful={rl['useful_ratio']:.3f}"
+        )
+    out(f"roofline/summary,0.0,ok={n_ok};skipped_by_design={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

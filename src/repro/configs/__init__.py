@@ -1,0 +1,72 @@
+"""Config registry: ``get_config(arch_id)`` / ``get_smoke_config(arch_id)``.
+
+Architecture ids use dashes (CLI form); module names use underscores.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    DatasetConfig,
+    GraphConfig,
+    ModelConfig,
+    PQConfig,
+    ProximaConfig,
+    SearchConfig,
+    ShapeConfig,
+    SHAPES,
+)
+
+ARCH_IDS: List[str] = [
+    "mistral-nemo-12b",
+    "stablelm-1.6b",
+    "granite-34b",
+    "deepseek-67b",
+    "granite-moe-3b-a800m",
+    "mixtral-8x22b",
+    "paligemma-3b",
+    "zamba2-1.2b",
+    "seamless-m4t-medium",
+    "falcon-mamba-7b",
+]
+
+_MODULES: Dict[str, str] = {
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "granite-34b": "granite_34b",
+    "deepseek-67b": "deepseek_67b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "paligemma-3b": "paligemma_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()
+
+
+def shape_cells(arch_id: str):
+    """The (shape, runnable, reason) cells for an arch — encodes the
+    long_500k sub-quadratic skip rule from DESIGN.md §4."""
+    cfg = get_config(arch_id)
+    cells = []
+    for name, shp in SHAPES.items():
+        if name == "long_500k" and not cfg.subquadratic:
+            cells.append((shp, False, "full quadratic attention; 500k decode skipped"))
+        else:
+            cells.append((shp, True, ""))
+    return cells

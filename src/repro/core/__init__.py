@@ -1,0 +1,18 @@
+"""Proxima core: the paper's algorithmic contribution (Algorithm 1 + §III/§IV-E
+data-layout optimizations) as composable JAX modules."""
+from repro.core.dataset import Dataset, exact_knn, make_dataset, recall_at_k
+from repro.core.index import ProximaIndex, build_index
+from repro.core.search import Corpus, SearchResult, search, search_reference
+
+__all__ = [
+    "Dataset",
+    "exact_knn",
+    "make_dataset",
+    "recall_at_k",
+    "ProximaIndex",
+    "build_index",
+    "Corpus",
+    "SearchResult",
+    "search",
+    "search_reference",
+]

@@ -1,0 +1,138 @@
+"""End-to-end Proxima index construction pipeline.
+
+dataset -> PQ codebook/codes -> proximity graph -> visit-frequency reordering
+-> hot-node selection -> gap encoding -> device Corpus.
+
+This is the offline "graph data preloading" phase of the paper (§IV-B); the
+resulting ``ProximaIndex`` carries both the host-side artifacts (for the NAND
+model and benchmarks) and the device-side ``Corpus`` (for JAX search).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ProximaConfig
+from repro.core import pq as pq_mod
+from repro.core.dataset import Dataset, make_dataset
+from repro.core.gap_encoding import GapEncodedGraph, gap_encode
+from repro.core.graph import Graph, build_graph
+from repro.core.reorder import (
+    Reordering,
+    apply_reordering,
+    remap_ground_truth,
+    reorder_graph,
+    trace_visit_frequency,
+)
+from repro.core.search import Corpus
+
+
+@dataclass
+class ProximaIndex:
+    config: ProximaConfig
+    dataset: Dataset                 # arrays in *reordered* id space
+    graph: Graph
+    codebook: pq_mod.PQCodebook
+    codes: np.ndarray                # (N, M) uint8, reordered
+    gap: Optional[GapEncodedGraph]
+    reordering: Optional[Reordering]
+    calibrated_beta: float
+
+    @property
+    def hot_count(self) -> int:
+        return self.reordering.hot_count if self.reordering else 0
+
+    def corpus(self) -> Corpus:
+        """Device-side search structures."""
+        return Corpus(
+            adjacency=jnp.asarray(self.graph.adjacency),
+            codes=jnp.asarray(self.codes),
+            base=jnp.asarray(self._search_base()),
+            centroids=jnp.asarray(self.codebook.centroids),
+            entry_point=jnp.int32(self.graph.entry_point),
+            hot_count=jnp.int32(self.hot_count),
+        )
+
+    def _search_base(self) -> np.ndarray:
+        b = self.dataset.base
+        if self.dataset.metric == "angular":
+            b = b / np.maximum(np.linalg.norm(b, axis=-1, keepdims=True), 1e-12)
+        return b
+
+    def index_bytes(self) -> dict:
+        """Storage accounting (paper Challenge 3 / §III-E)."""
+        n, r = self.graph.adjacency.shape
+        raw = self.dataset.base.nbytes
+        idx_raw = n * r * 4
+        idx_gap = self.gap.encoded_bytes if self.gap else idx_raw
+        pq_bytes = self.codes.nbytes
+        hot_extra = self.hot_count * r * self.codes.shape[1]  # repeated PQ codes
+        return {
+            "raw_bytes": raw,
+            "index_bytes_uncompressed": idx_raw,
+            "index_bytes_gap": idx_gap,
+            "pq_bytes": pq_bytes,
+            "hot_repetition_bytes": hot_extra,
+            "total_bytes": raw + idx_gap + pq_bytes + hot_extra,
+        }
+
+
+def build_index(
+    cfg: ProximaConfig,
+    dataset: Optional[Dataset] = None,
+    graph_method: str = "knn_prune",
+    reorder_samples: int = 128,
+    calibrate: bool = False,
+) -> ProximaIndex:
+    ds = dataset if dataset is not None else make_dataset(cfg.dataset)
+    metric = ds.metric
+
+    # --- PQ (paper §III-B: search-time only; graph built on full precision)
+    codebook = pq_mod.train_pq(ds.base, cfg.pq, metric)
+    enc_in = ds.base
+    if metric == "angular":
+        enc_in = enc_in / np.maximum(np.linalg.norm(enc_in, axis=-1, keepdims=True), 1e-12)
+    codes = np.asarray(pq_mod.encode(jnp.asarray(enc_in), jnp.asarray(codebook.centroids)))
+
+    # --- graph on full-precision coordinates
+    graph = build_graph(ds.base, cfg.graph, metric, method=graph_method)
+
+    # --- reordering + hot nodes (§IV-E)
+    reordering = None
+    if cfg.hot_node_fraction > 0:
+        freq = trace_visit_frequency(
+            graph, enc_in, codes, codebook.centroids, cfg.search, metric,
+            num_samples=reorder_samples, seed=cfg.dataset.seed,
+        )
+        graph, reordering = reorder_graph(graph, freq, cfg.hot_node_fraction)
+        (new_base,) = apply_reordering(reordering, ds.base)
+        (codes,) = apply_reordering(reordering, codes)
+        ds = Dataset(
+            base=new_base,
+            queries=ds.queries,
+            gt=remap_ground_truth(reordering, ds.gt),
+            metric=ds.metric,
+            config=ds.config,
+        )
+
+    # --- gap encoding (§III-E)
+    gap = gap_encode(graph.adjacency) if cfg.gap_encode else None
+
+    beta = cfg.search.beta
+    if calibrate:
+        rng = np.random.default_rng(cfg.dataset.seed)
+        beta = pq_mod.calibrate_beta(codebook, codes, enc_in, rng)
+
+    return ProximaIndex(
+        config=cfg,
+        dataset=ds,
+        graph=graph,
+        codebook=codebook,
+        codes=codes,
+        gap=gap,
+        reordering=reordering,
+        calibrated_beta=beta,
+    )

@@ -1,0 +1,84 @@
+"""Graph index reordering + hot-node selection (paper §IV-E, Fig. 10-a).
+
+Vertices are renumbered by descending visit frequency, measured by tracing
+searches over randomly sampled base vectors (exactly the paper's procedure:
+"the calculation of vertices' visiting frequency is based on the graph search
+trace from the randomly sampled base data"). After reordering, the entry
+point has index 0 and the hottest ``hot_fraction`` of nodes occupy the lowest
+ids — the search layer and the NAND model both treat ``id < hot_count`` as a
+hot-node-repetition hit (NN indices + neighbours' PQ codes co-located).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import SearchConfig
+from repro.core.graph import Graph
+
+
+@dataclass
+class Reordering:
+    perm: np.ndarray        # old id -> new id
+    inv: np.ndarray         # new id -> old id
+    hot_count: int
+
+
+def trace_visit_frequency(
+    graph: Graph,
+    base: np.ndarray,
+    codes: np.ndarray,
+    centroids: np.ndarray,
+    cfg: SearchConfig,
+    metric: str,
+    num_samples: int = 128,
+    seed: int = 0,
+) -> np.ndarray:
+    """Expansion-frequency histogram from sampled-base-vector searches."""
+    from repro.core.search import search_reference
+
+    rng = np.random.default_rng(seed)
+    n = graph.num_vertices
+    freq = np.zeros(n, dtype=np.int64)
+    sample = rng.choice(n, size=min(num_samples, n), replace=False)
+    for qi in sample:
+        _, _, counters = search_reference(
+            graph.adjacency, graph.degrees, codes, base, centroids,
+            graph.entry_point, base[qi], cfg, metric,
+            trace=freq,
+        )
+    return freq
+
+
+def reorder_graph(
+    graph: Graph, freq: np.ndarray, hot_fraction: float
+) -> tuple[Graph, Reordering]:
+    """Renumber vertices by descending visit frequency; entry point -> 0."""
+    n = graph.num_vertices
+    # entry point must stay hottest (it is visited by every query)
+    key = freq.astype(np.float64).copy()
+    key[graph.entry_point] = np.inf
+    order = np.argsort(-key, kind="stable")       # new id -> old id
+    inv = order.astype(np.int32)
+    perm = np.empty(n, dtype=np.int32)            # old id -> new id
+    perm[order] = np.arange(n, dtype=np.int32)
+    new_adj = perm[graph.adjacency[inv]]          # remap rows + contents
+    new_deg = graph.degrees[inv]
+    hot_count = int(np.ceil(hot_fraction * n)) if hot_fraction > 0 else 0
+    g2 = Graph(
+        adjacency=new_adj.astype(np.int32),
+        degrees=new_deg.astype(np.int32),
+        entry_point=int(perm[graph.entry_point]),
+        metric=graph.metric,
+    )
+    return g2, Reordering(perm=perm, inv=inv, hot_count=hot_count)
+
+
+def apply_reordering(reord: Reordering, *arrays: np.ndarray) -> tuple:
+    """Permute data arrays (base, codes, ...) into the new id space."""
+    return tuple(a[reord.inv] for a in arrays)
+
+
+def remap_ground_truth(reord: Reordering, gt: np.ndarray) -> np.ndarray:
+    return reord.perm[gt]

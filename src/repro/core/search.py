@@ -1,0 +1,427 @@
+"""Proxima graph search — Algorithm 1 of the paper, as a fixed-shape JAX
+program (vmapped over the query batch = the ASIC's N_q search queues).
+
+Per traversal round (one iteration of the ``lax.while_loop``):
+  1. pop the best unevaluated candidate from the sorted list  (Alg.1 l.4)
+  2. fetch its R neighbours, Bloom-filter already-visited ones (l.6, §IV-B)
+  3. PQ-distance the new ones via the ADT                      (l.7)
+  4. merge + sort, keep top L                                  (l.10)
+  5. if the top-T entries are all evaluated: rerank top T with accurate
+     distances (cached), check early termination (r stable rounds), then
+     grow T by T_step                                          (l.11-16)
+Post-loop: beta-margin rerank of every candidate whose PQ distance is within
+beta of the T-th candidate's, then return top-k by accurate distance (l.19-22).
+
+Counters (per query) feed the NAND performance model and the memory-traffic
+benchmarks: hops (index fetches), pq (code fetches + LUT distance computations),
+acc (raw-vector fetches), hot_hops / free_pq (hot-node repetition hits).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SearchConfig
+from repro.core import bloom
+from repro.core.pq import compute_adt, pq_distance
+
+INF = jnp.float32(jnp.inf)
+
+
+class Corpus(NamedTuple):
+    """Device-resident search structures (one NAND tile's worth)."""
+    adjacency: jnp.ndarray      # (N, R) int32 padded
+    codes: jnp.ndarray          # (N, M) uint8 PQ codes
+    base: jnp.ndarray           # (N, D) f32 raw vectors (rerank path)
+    centroids: jnp.ndarray      # (M, C, dsub) f32 PQ codebook
+    entry_point: jnp.ndarray    # () int32
+    hot_count: jnp.ndarray      # () int32 — ids < hot_count are "hot nodes"
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray            # (Q, k) int32
+    dists: jnp.ndarray          # (Q, k) f32 accurate distances
+    n_hops: jnp.ndarray         # (Q,) expansions (index fetches)
+    n_pq: jnp.ndarray           # (Q,) PQ distance computations
+    n_acc: jnp.ndarray          # (Q,) accurate distance computations
+    n_hot_hops: jnp.ndarray     # (Q,) expansions that hit a hot node
+    n_free_pq: jnp.ndarray      # (Q,) PQ fetches covered by hot-node pages
+    rounds: jnp.ndarray         # (Q,) traversal rounds
+
+
+class _State(NamedTuple):
+    ids: jnp.ndarray            # (L,) int32, -1 padding, sorted by dist
+    dists: jnp.ndarray          # (L,) f32 traversal (PQ) distances
+    acc: jnp.ndarray            # (L,) f32 accurate distances, +inf if unknown
+    evaluated: jnp.ndarray      # (L,) bool
+    bits: jnp.ndarray           # (W,) uint32 Bloom filter
+    t: jnp.ndarray              # () int32 dynamic list size
+    prev_topk: jnp.ndarray      # (k,) int32 last reranked top-k (sorted ids)
+    stable: jnp.ndarray         # () int32 consecutive stable rounds
+    done: jnp.ndarray           # () bool
+    n_hops: jnp.ndarray
+    n_pq: jnp.ndarray
+    n_acc: jnp.ndarray
+    n_hot: jnp.ndarray
+    n_free: jnp.ndarray
+    rounds: jnp.ndarray
+
+
+def _exact_dist(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """q (D,), x (K, D) -> (K,). Angular assumes pre-normalized inputs."""
+    if metric == "l2":
+        diff = x - q[None, :]
+        return (diff * diff).sum(-1)
+    return -(x @ q)
+
+
+def _dedup_round(neighbors: jnp.ndarray) -> jnp.ndarray:
+    """Mask duplicates within one fetched neighbour row (padding repeats)."""
+    r = neighbors.shape[0]
+    eq = neighbors[None, :] == neighbors[:, None]
+    lower = jnp.tril(jnp.ones((r, r), bool), k=-1)
+    return ~(eq & lower).any(axis=1)
+
+
+def _merge_sort_topl(ids, dists, acc, evaluated, n_ids, n_dists):
+    """Merge L existing + R new candidates, sort by dist, keep top L."""
+    l = ids.shape[0]
+    all_ids = jnp.concatenate([ids, n_ids])
+    all_d = jnp.concatenate([dists, n_dists])
+    all_acc = jnp.concatenate([acc, jnp.full(n_ids.shape, INF)])
+    all_ev = jnp.concatenate([evaluated, jnp.zeros(n_ids.shape, bool)])
+    order = jnp.argsort(all_d, stable=True)
+    return (
+        all_ids[order][:l],
+        all_d[order][:l],
+        all_acc[order][:l],
+        all_ev[order][:l],
+    )
+
+
+def _topk_ids_by(ids, key, k):
+    """ids of the k smallest keys, returned sorted by id for set comparison."""
+    _, idx = jax.lax.top_k(-key, k)
+    got = ids[idx]
+    return jnp.sort(got)
+
+
+def _merge_sort_topl_bitonic(ids, dists, acc, evaluated, n_ids, n_dists):
+    """Kernel-path variant of ``_merge_sort_topl``: the merged (L+R) list is
+    sorted by the Pallas bitonic network (the ASIC's shared Bitonic Sorter),
+    carrying the position index as payload; other payloads follow by gather."""
+    from repro.kernels import ops
+
+    l = ids.shape[0]
+    all_ids = jnp.concatenate([ids, n_ids])
+    all_d = jnp.concatenate([dists, n_dists])
+    all_acc = jnp.concatenate([acc, jnp.full(n_ids.shape, INF)])
+    all_ev = jnp.concatenate([evaluated, jnp.zeros(n_ids.shape, bool)])
+    total = all_d.shape[0]
+    pot = 1 << (total - 1).bit_length()
+    keys = jnp.pad(all_d, (0, pot - total), constant_values=jnp.inf)
+    pos = jnp.pad(jnp.arange(total, dtype=jnp.int32), (0, pot - total),
+                  constant_values=0)
+    # NOTE: bitonic is not stable; +inf-keyed entries are interchangeable
+    # (all carry id=-1), so only exact finite-key ties can reorder.
+    _, perm = ops.bitonic_sort_pairs(keys[None], pos[None])
+    perm = perm[0, :l]
+    return all_ids[perm], all_d[perm], all_acc[perm], all_ev[perm]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "metric", "bloom_bits", "num_hashes"),
+)
+def search(
+    corpus: Corpus,
+    queries: jnp.ndarray,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    bloom_bits: int = 1 << 17,
+    num_hashes: int = 8,
+) -> SearchResult:
+    """Batched Proxima search. queries: (Q, D)."""
+    if metric == "angular":
+        queries = queries / jnp.maximum(
+            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
+        )
+
+    L, k = cfg.list_size, cfg.k
+    R = corpus.adjacency.shape[1]
+    use_pq, do_et = cfg.use_pq, cfg.early_termination
+    t_init = cfg.t_init if do_et else L
+    t_step = cfg.t_step if do_et else L
+
+    # --- batched ADT construction (Pallas pq_adt kernel path) ---------------
+    if use_pq:
+        if cfg.use_pallas:
+            from repro.kernels import ops
+
+            adts = ops.pq_adt(queries, corpus.centroids, metric)
+        else:
+            adts = jax.vmap(lambda q: compute_adt(q, corpus.centroids, metric))(
+                queries
+            )
+    else:
+        adts = jnp.zeros((queries.shape[0], 1, 1), jnp.float32)
+
+    merge = _merge_sort_topl_bitonic if cfg.use_pallas else _merge_sort_topl
+
+    def one_query(q, adt):
+        def tdist(ids):
+            if use_pq:
+                if cfg.use_pallas:
+                    from repro.kernels import ops
+
+                    return ops.pq_lookup(corpus.codes[ids], adt)
+                return pq_distance(corpus.codes[ids], adt)
+            return _exact_dist(q, corpus.base[ids], metric)
+
+        ep = corpus.entry_point
+        d0 = tdist(ep[None])[0]
+        ids0 = jnp.full((L,), -1, jnp.int32).at[0].set(ep)
+        dists0 = jnp.full((L,), INF).at[0].set(d0)
+        acc0 = jnp.full((L,), INF)
+        if not use_pq:
+            acc0 = acc0.at[0].set(d0)
+        bits0 = bloom.bloom_init(bloom_bits)
+        bits0 = bloom.insert(bits0, ep[None], jnp.ones((1,), bool), num_hashes)
+
+        st = _State(
+            ids=ids0, dists=dists0, acc=acc0,
+            evaluated=jnp.zeros((L,), bool), bits=bits0,
+            t=jnp.int32(min(t_init, L)),
+            prev_topk=jnp.full((k,), -2, jnp.int32),
+            stable=jnp.int32(0), done=jnp.bool_(False),
+            n_hops=jnp.int32(0), n_pq=jnp.int32(1 if use_pq else 0),
+            n_acc=jnp.int32(0 if use_pq else 1),
+            n_hot=jnp.int32(0), n_free=jnp.int32(0), rounds=jnp.int32(0),
+        )
+
+        def cond(s: _State):
+            return (~s.done) & (s.rounds < cfg.max_rounds)
+
+        def body(s: _State):
+            valid = s.ids >= 0
+            unev = valid & ~s.evaluated
+            has_unev = unev.any()
+            first = jnp.argmax(unev)                       # best unevaluated
+            v = jnp.where(has_unev, s.ids[first], 0)
+
+            # ---- expand v --------------------------------------------------
+            neigh = corpus.adjacency[v]                    # (R,)
+            fresh = _dedup_round(neigh) & ~bloom.contains(s.bits, neigh, num_hashes)
+            fresh = fresh & has_unev
+            nd = tdist(neigh)
+            nd = jnp.where(fresh, nd, INF)
+            bits = bloom.insert(s.bits, neigh, fresh, num_hashes)
+            evaluated = s.evaluated.at[first].set(s.evaluated[first] | has_unev)
+            n_new = fresh.sum()
+            is_hot = v < corpus.hot_count
+            ids, dists, acc, evaluated = merge(
+                s.ids, s.dists, s.acc, evaluated,
+                jnp.where(fresh, neigh, -1).astype(jnp.int32), nd,
+            )
+
+            # ---- top-T evaluated? -> rerank + early-termination ------------
+            valid = ids >= 0
+            in_t = (jnp.arange(L) < s.t) & valid
+            all_eval = jnp.where(in_t.any(), (~in_t | evaluated).all(), False)
+
+            need = in_t & jnp.isinf(acc)
+            acc_new = _exact_dist(q, corpus.base[jnp.maximum(ids, 0)], metric)
+            acc2 = jnp.where(need & all_eval, acc_new, acc)
+            n_acc_new = jnp.where(all_eval, need.sum(), 0)
+            if use_pq:
+                rerank_key = jnp.where(in_t, acc2, INF)
+            else:
+                acc2 = jnp.where(valid, dists, INF)
+                rerank_key = jnp.where(in_t, acc2, INF)
+            new_topk = _topk_ids_by(ids, rerank_key, k)
+            same = (new_topk == s.prev_topk).all()
+            stable = jnp.where(all_eval, jnp.where(same, s.stable + 1, 1), s.stable)
+            prev_topk = jnp.where(all_eval, new_topk, s.prev_topk)
+            t = jnp.where(all_eval, s.t + t_step, s.t)
+
+            terminated = do_et & all_eval & (stable >= cfg.repetition_rate)
+            exhausted = ~has_unev
+            overflow = t > L
+            done = terminated | exhausted | overflow
+
+            new = _State(
+                ids=ids, dists=dists, acc=acc2, evaluated=evaluated, bits=bits,
+                t=jnp.minimum(t, L), prev_topk=prev_topk, stable=stable,
+                done=done,
+                n_hops=s.n_hops + has_unev.astype(jnp.int32),
+                n_pq=s.n_pq + (n_new if use_pq else 0),
+                n_acc=s.n_acc + n_acc_new + (0 if use_pq else n_new),
+                n_hot=s.n_hot + (has_unev & is_hot).astype(jnp.int32),
+                n_free=s.n_free + jnp.where(is_hot, n_new, 0),
+                rounds=s.rounds + 1,
+            )
+            # lanes that were already done keep their state (vmap-safety)
+            return jax.tree_util.tree_map(
+                lambda a, b: jnp.where(s.done, a, b), s, new
+            )
+
+        return jax.lax.while_loop(cond, body, st)
+
+    s = jax.vmap(one_query)(queries, adts)
+
+    # ---- final beta rerank, batched (Alg.1 l.19-21; Pallas l2_rerank) ------
+    valid = s.ids >= 0                                       # (Q, L)
+    t_idx = jnp.clip(s.t, 1, L) - 1
+    d_t = jnp.take_along_axis(s.dists, t_idx[:, None], 1)[:, 0]
+    thr = d_t + (cfg.beta - 1.0) * jnp.abs(d_t)              # sign-safe margin
+    if use_pq and cfg.rerank:
+        need = valid & (s.dists <= thr[:, None]) & jnp.isinf(s.acc)
+        cand = corpus.base[jnp.maximum(s.ids, 0)]            # (Q, L, D)
+        if cfg.use_pallas:
+            from repro.kernels import ops
+
+            acc_new = ops.l2_rerank(queries, cand, metric)
+        else:
+            acc_new = jax.vmap(lambda q, x: _exact_dist(q, x, metric))(
+                queries, cand
+            )
+        acc = jnp.where(need, acc_new, s.acc)
+        n_acc = s.n_acc + need.sum(axis=1)
+    else:
+        # no rerank (rank by PQ) / accurate traversal (dists are accurate)
+        acc = jnp.where(valid, s.dists, INF)
+        n_acc = s.n_acc
+    key = jnp.where(valid, acc, INF)
+    neg, idx = jax.lax.top_k(-key, k)
+    out_ids = jnp.take_along_axis(s.ids, idx, 1)
+    return SearchResult(
+        ids=out_ids, dists=-neg, n_hops=s.n_hops, n_pq=s.n_pq, n_acc=n_acc,
+        n_hot_hops=s.n_hot, n_free_pq=s.n_free, rounds=s.rounds,
+    )
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference (direct Algorithm-1 transliteration) — the test oracle
+# ---------------------------------------------------------------------------
+
+def search_reference(
+    adjacency: np.ndarray,
+    degrees: np.ndarray,
+    codes: np.ndarray,
+    base: np.ndarray,
+    centroids: np.ndarray,
+    entry: int,
+    query: np.ndarray,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    hot_count: int = 0,
+    trace: np.ndarray | None = None,
+):
+    """Single-query Python loop implementation of Algorithm 1 with an exact
+    visited set (no Bloom false positives). Returns (ids, dists, counters).
+    If ``trace`` is given, expansion counts are accumulated into it
+    (visit-frequency histogram for graph reordering, §IV-E)."""
+    from repro.core.dataset import pairwise_dist
+
+    if metric == "angular":
+        query = query / max(float(np.linalg.norm(query)), 1e-12)
+
+    m = centroids.shape[0]
+    if cfg.use_pq:
+        adt = np.asarray(compute_adt(jnp.asarray(query), jnp.asarray(centroids), metric))
+
+        def tdist(ids):
+            return adt[np.arange(m)[None, :], codes[ids].astype(np.int64)].sum(-1)
+    else:
+        def tdist(ids):
+            return pairwise_dist(query[None], base[ids], metric)[0]
+
+    def adist(ids):
+        return pairwise_dist(query[None], base[ids], metric)[0]
+
+    L, k = cfg.list_size, cfg.k
+    counters = {"hops": 0, "pq": 0, "acc": 0, "hot": 0, "free": 0, "rounds": 0}
+    d0 = float(tdist(np.asarray([entry]))[0])
+    counters["pq" if cfg.use_pq else "acc"] += 1
+    lst = [(d0, int(entry))]        # sorted (dist, id)
+    visited = {int(entry)}
+    evaluated = set()
+    acc_cache = {}
+    t = cfg.t_init if cfg.early_termination else L
+    t_step = cfg.t_step if cfg.early_termination else L
+    prev_topk = None
+    stable = 0
+    while counters["rounds"] < cfg.max_rounds:
+        counters["rounds"] += 1
+        unev = [(d, v) for d, v in lst if v not in evaluated]
+        if not unev:
+            break
+        d_v, v = unev[0]
+        evaluated.add(v)
+        counters["hops"] += 1
+        if trace is not None:
+            trace[v] += 1
+        is_hot = v < hot_count
+        if is_hot:
+            counters["hot"] += 1
+        neigh = [int(u) for u in adjacency[v, : degrees[v]]]
+        neigh = [u for u in dict.fromkeys(neigh) if u not in visited]
+        if neigh:
+            nd = tdist(np.asarray(neigh))
+            counters["pq" if cfg.use_pq else "acc"] += len(neigh)
+            if is_hot:
+                counters["free"] += len(neigh)
+            for u, du in zip(neigh, nd):
+                visited.add(u)
+                lst.append((float(du), u))
+            lst.sort(key=lambda x: (x[0], ))
+            lst = lst[:L]
+        top_t = lst[: min(t, len(lst))]
+        if top_t and all(v2 in evaluated for _, v2 in top_t):
+            ids_t = [v2 for _, v2 in top_t]
+            fresh = [u for u in ids_t if u not in acc_cache]
+            if cfg.use_pq and fresh:
+                for u, du in zip(fresh, adist(np.asarray(fresh))):
+                    acc_cache[u] = float(du)
+                counters["acc"] += len(fresh)
+            if not cfg.use_pq:
+                for dd, u in top_t:
+                    acc_cache[u] = dd
+            topk = tuple(sorted(
+                [u for u in ids_t][: len(ids_t)],
+                key=lambda u: acc_cache[u],
+            )[:k])
+            topk = tuple(sorted(topk))
+            if topk == prev_topk:
+                stable += 1
+            else:
+                stable = 1
+            prev_topk = topk
+            if cfg.early_termination and stable >= cfg.repetition_rate:
+                break
+            t += t_step
+            if t > L:
+                break
+    # final beta rerank
+    t_idx = min(max(t, 1), len(lst)) - 1
+    d_t = lst[t_idx][0]
+    thr = d_t + (cfg.beta - 1.0) * abs(d_t)
+    if cfg.use_pq and cfg.rerank:
+        need = [u for d, u in lst if d <= thr and u not in acc_cache]
+        if need:
+            for u, du in zip(need, adist(np.asarray(need))):
+                acc_cache[u] = float(du)
+            counters["acc"] += len(need)
+        scored = sorted(acc_cache.items(), key=lambda kv: kv[1])
+    else:
+        scored = sorted(((u, d) for d, u in lst), key=lambda kv: kv[1])
+    ids = np.asarray([u for u, _ in scored[:k]], dtype=np.int32)
+    ds = np.asarray([d for _, d in scored[:k]], dtype=np.float32)
+    if len(ids) < k:
+        ids = np.pad(ids, (0, k - len(ids)), constant_values=-1)
+        ds = np.pad(ds, (0, k - len(ds)), constant_values=np.inf)
+    return ids, ds, counters

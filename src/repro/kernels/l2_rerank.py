@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: accurate-distance reranking (paper §III-C / Alg.1
+l.12+19 — the "accurate distance" path of the Distance Computation Module).
+
+Given a query batch (Q, D) and per-query gathered candidate vectors
+(Q, K, D), emit (Q, K) exact distances:
+
+    l2: ||q||^2 - 2 q.x + ||x||^2      ip/angular: -q.x
+
+The q.x contraction is a (K, D) x (D, 1) MXU matvec per query tile. Tiling:
+grid over (query, candidate-block); VMEM per program = KB*D*4 + D*4 bytes
+(K=128, D=128 -> 64 kB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rerank_kernel(q_ref, x_ref, out_ref, *, metric: str):
+    q = q_ref[...]            # (1, D)
+    x = x_ref[...][0]         # (KB, D)
+    dot = jax.lax.dot_general(
+        x, q.reshape(-1, 1),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    if metric == "l2":
+        out_ref[...] = (
+            (q * q).sum() - 2.0 * dot + (x * x).sum(axis=1)
+        )[None, :]
+    else:
+        out_ref[...] = (-dot)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k_block", "interpret"))
+def l2_rerank(
+    queries: jnp.ndarray,      # (Q, D)
+    candidates: jnp.ndarray,   # (Q, K, D) gathered candidate vectors
+    metric: str = "l2",
+    k_block: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (Q, K) accurate distances."""
+    q, k, d = candidates.shape
+    if k_block == 0:
+        k_block = k
+    assert k % k_block == 0
+    return pl.pallas_call(
+        functools.partial(_rerank_kernel, metric=metric),
+        grid=(q, k // k_block),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k_block, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, k), jnp.float32),
+        interpret=interpret,
+    )(queries, candidates)

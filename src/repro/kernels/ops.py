@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this container (CPU) the kernels execute in ``interpret=True`` mode, which
+runs the kernel bodies in Python for correctness validation; on a real TPU
+set ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile them to
+Mosaic. ``use_kernels()`` gates whether the search layer routes through the
+Pallas path or the pure-jnp reference path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitonic_topk import bitonic_sort_pairs as _bitonic
+from repro.kernels.l2_rerank import l2_rerank as _l2_rerank
+from repro.kernels.pq_adt import pq_adt as _pq_adt
+from repro.kernels.pq_lookup import pq_lookup as _pq_lookup
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def pq_adt(queries, centroids, metric="l2", interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    q = queries.shape[0]
+    q_block = 8 if q % 8 == 0 else (4 if q % 4 == 0 else 1)
+    return _pq_adt(queries, centroids, metric=metric, q_block=q_block, interpret=interpret)
+
+
+def pq_lookup(codes, adt, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _pq_lookup(codes, adt, interpret=interpret)
+
+
+def bitonic_sort_pairs(keys, vals, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _bitonic(keys, vals, interpret=interpret)
+
+
+def l2_rerank(queries, candidates, metric="l2", interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _l2_rerank(queries, candidates, metric=metric, interpret=interpret)
+
+
+# re-export oracles for convenience
+pq_adt_ref = ref.pq_adt_ref
+pq_lookup_ref = ref.pq_lookup_ref
+bitonic_sort_pairs_ref = ref.bitonic_sort_pairs_ref
+l2_rerank_ref = ref.l2_rerank_ref

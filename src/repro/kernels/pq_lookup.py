@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: PQ distance evaluation, Eq. (3) of the paper.
+
+The ASIC's per-queue "Distance Computation Module" does M SRAM lookups + an
+M-term accumulation per candidate. TPUs have no efficient VMEM gather, but
+they have an MXU — so the lookup is re-expressed as a ONE-HOT MATMUL
+(DESIGN.md §2, hardware adaptation):
+
+    dist[n] = sum_m ADT[m, codes[n, m]]
+            = onehot(codes)[n, :] . vec(ADT)      with onehot in {0,1}^(M*C)
+
+The one-hot block is built in-register from a broadcasted iota comparison —
+it never exists in HBM. Per grid step the kernel holds a (NB, M) code tile,
+the full (M, C) ADT and the (NB, M, C) one-hot in VMEM:
+NB=128, M=32, C=256 -> 128*8192*4 B = 4 MB (fits v5e's 16 MB VMEM twice over
+for double buffering). The contraction is a (NB, M*C) x (M*C, 1) matvec on
+the MXU with f32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lookup_kernel(codes_ref, adt_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.int32)        # (NB, M)
+    adt = adt_ref[...]                              # (M, C)
+    m, c = adt.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], m, c), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)   # in-register
+    flat = onehot.reshape(codes.shape[0], m * c)
+    out_ref[...] = jax.lax.dot_general(
+        flat, adt.reshape(m * c, 1),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_block", "interpret"))
+def pq_lookup(
+    codes: jnp.ndarray,   # (N, M) uint8
+    adt: jnp.ndarray,     # (M, C) float32
+    n_block: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (N,) float32 PQ distances."""
+    n, m = codes.shape
+    _, c = adt.shape
+    pad = (-n) % n_block
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    np_ = n + pad
+    out = pl.pallas_call(
+        _lookup_kernel,
+        grid=(np_ // n_block,),
+        in_specs=[
+            pl.BlockSpec((n_block, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(codes, adt)
+    return out[:n]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_adt_ref(queries: jnp.ndarray, centroids: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """(Q, D), (M, C, dsub) -> (Q, M, C)."""
+    m, c, dsub = centroids.shape
+    qs = queries.reshape(queries.shape[0], m, dsub)
+    if metric == "l2":
+        diff = qs[:, :, None, :] - centroids[None]
+        return (diff * diff).sum(-1)
+    return -jnp.einsum("qmd,mcd->qmc", qs, centroids)
+
+
+def pq_lookup_ref(codes: jnp.ndarray, adt: jnp.ndarray) -> jnp.ndarray:
+    """(N, M) uint8, (M, C) -> (N,)."""
+    m = adt.shape[0]
+    return adt[jnp.arange(m)[None, :], codes.astype(jnp.int32)].sum(-1)
+
+
+def bitonic_sort_pairs_ref(keys: jnp.ndarray, vals: jnp.ndarray):
+    """(Q, L) -> row-wise ascending sort carrying vals."""
+    order = jnp.argsort(keys, axis=1, stable=True)
+    return jnp.take_along_axis(keys, order, 1), jnp.take_along_axis(vals, order, 1)
+
+
+def l2_rerank_ref(queries: jnp.ndarray, candidates: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """(Q, D), (Q, K, D) -> (Q, K)."""
+    dot = jnp.einsum("qd,qkd->qk", queries, candidates)
+    if metric == "l2":
+        return (
+            (queries * queries).sum(-1)[:, None]
+            - 2.0 * dot
+            + (candidates * candidates).sum(-1)
+        )
+    return -dot

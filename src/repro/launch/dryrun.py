@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh both --out results/dryrun.json
+
+Per cell this builds the abstract train/serve step (ShapeDtypeStruct only —
+no real allocation), jit-lowers it with explicit in/out shardings, compiles,
+and records:
+  * memory_analysis (bytes per device: argument/output/temp/peak)
+  * cost_analysis (FLOPs, bytes accessed)
+  * collective bytes parsed from the compiled HLO (roofline/analysis.py)
+Results are written incrementally, so interrupted runs resume.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shard_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model, build_model, input_specs
+from repro.roofline import analysis as roofline
+from repro.train.loop import TrainState, make_train_step
+from repro.train.optimizer import AdamW
+
+
+def model_init_specs(model: Model):
+    """Logical specs are static metadata: evaluate init abstractly but pull
+    the spec pytree out via closure (init returns (params, specs))."""
+    holder = {}
+
+    def make():
+        params, specs = model.init(jax.random.PRNGKey(0))
+        holder["specs"] = specs
+        return params
+
+    params_shape = jax.eval_shape(make)
+    return params_shape, holder["specs"]
+
+
+# train cells whose saved-activation stacks exceed v5e HBM without
+# sequence-parallel residual sharding (see EXPERIMENTS.md §Perf iteration 2)
+SEQ_PARALLEL_TRAIN = {
+    "mistral-nemo-12b", "granite-34b", "deepseek-67b", "mixtral-8x22b",
+    "falcon-mamba-7b", "zamba2-1.2b",
+}
+
+# per-arch MoE dispatch-buffer layout (EXPERIMENTS.md §Perf M4/M5):
+# few-expert models prefer the data-sharded dispatch buffer; many-expert
+# models do better with GSPMD's expert-dim strategy
+MOE_DISPATCH_HINT = {"mixtral-8x22b": True, "granite-moe-3b-a800m": False}
+
+# prefill cells whose single-shot buffers exceed HBM -> segmented prefill
+# (EXPERIMENTS.md §Perf P1); vlm/encdec keep the single-shot path.
+# deepseek-67b is EXCLUDED: chunking regressed it (51 vs 40 GB — the
+# cache-resident attention rematerializes fp32 copies; refuted, see log)
+CHUNKED_PREFILL = {
+    "granite-moe-3b-a800m", "mixtral-8x22b", "zamba2-1.2b",
+}
+CHUNKED_PREFILL_SEG = 4096
+
+
+def _cell_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Per-device microbatch of ~1 sequence for train cells (memory-safe
+    default at 4k seq; the §Perf log sweeps this knob)."""
+    bsz = int(np.prod([mesh.shape[a] for a in shard_lib.batch_axes(mesh)]))
+    if shape.kind != "train":
+        return 1
+    per_dev = max(shape.global_batch // bsz, 1)
+    return per_dev
+
+
+def lower_cell(
+    arch: str,
+    shape: ShapeConfig,
+    mesh,
+    model_kw: Optional[Dict[str, Any]] = None,
+    microbatches: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    model_kw = dict(model_kw or {})
+    if shape.kind == "train" and arch in SEQ_PARALLEL_TRAIN:
+        model_kw.setdefault("seq_parallel", True)
+    if arch in MOE_DISPATCH_HINT:
+        model_kw.setdefault("moe_dispatch_hint", MOE_DISPATCH_HINT[arch])
+    model = build_model(cfg, **model_kw)
+    optimizer = AdamW()
+    t0 = time.time()
+    mb_used = 1
+    kv_bytes_local = 0.0
+
+    params_shape, specs = model_init_specs(model)
+    p_sh = shard_lib.param_shardings(specs, params_shape, mesh)
+    batch = input_specs(cfg, shape)
+    baxes = shard_lib.batch_axes(mesh)
+    bshard = NamedSharding(mesh, P(baxes))
+    batch_sh = {k: NamedSharding(mesh, P(baxes, *([None] * (len(v.shape) - 1))))
+                for k, v in batch.items()}
+
+    with mesh, shard_lib.activation_hints(mesh):
+        if shape.kind == "train":
+            mb = mb_used = microbatches or _cell_microbatches(cfg, shape, mesh)
+            state_shape = jax.eval_shape(
+                lambda p: TrainState(params=p, opt=optimizer.init(p)),
+                params_shape,
+            )
+            from repro.train.loop import state_shardings
+            st_sh = state_shardings(specs, state_shape, mesh)
+            train_step, _ = make_train_step(model, optimizer, mesh,
+                                            microbatches=mb,
+                                            param_shardings=st_sh.params)
+            fn = jax.jit(
+                train_step,
+                in_shardings=(st_sh, batch_sh),
+                out_shardings=(st_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state_shape, batch)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = roofline.train_model_flops(cfg.active_param_count(), tokens)
+        elif shape.kind == "prefill":
+            if arch in CHUNKED_PREFILL:
+                def prefill_step(params, b):
+                    return model.prefill_chunked(
+                        params, b, seg_len=CHUNKED_PREFILL_SEG,
+                        max_len=shape.seq_len + 8,
+                    )
+            else:
+                def prefill_step(params, b):
+                    logits, cache = model.prefill(
+                        params, b, max_len=shape.seq_len + 8
+                    )
+                    return logits, cache
+
+            cache_shape = jax.eval_shape(
+                lambda p, b: prefill_step(p, b)[1], params_shape, batch
+            )
+            c_sh = shard_lib.cache_shardings(mesh, cache_shape, cfg)
+            vshard = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+            fn = jax.jit(
+                prefill_step,
+                in_shardings=(p_sh, batch_sh),
+                out_shardings=(NamedSharding(mesh, P(baxes, None, vshard)), c_sh),
+            )
+            lowered = fn.lower(params_shape, batch)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = roofline.decode_model_flops(cfg.active_param_count(), tokens)
+        else:  # decode
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cache_shape = cache_shape._replace(length=jax.ShapeDtypeStruct((), jnp.int32))
+            if cfg.family == "encdec":
+                d = cfg.d_model
+                cache_shape = cache_shape._replace(
+                    enc_out=jax.ShapeDtypeStruct(
+                        (shape.global_batch, shape.seq_len, d), jnp.dtype(cfg.dtype)
+                    )
+                )
+            c_sh = shard_lib.cache_shardings(mesh, cache_shape, cfg)
+            tok_sh = NamedSharding(
+                mesh,
+                P(baxes if shape.global_batch % int(np.prod([mesh.shape[a] for a in baxes])) == 0 else None, None),
+            )
+
+            def serve_step(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            vshard = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+            fn = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, c_sh, tok_sh),
+                out_shardings=(
+                    NamedSharding(mesh, P(tok_sh.spec[0], None, vshard)), c_sh
+                ),
+                donate_argnums=(1,),
+            )
+            tok_shape = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            lowered = fn.lower(params_shape, cache_shape, tok_shape)
+            model_flops = roofline.decode_model_flops(
+                cfg.active_param_count(), shape.global_batch
+            )
+            kv_bytes_local = sum(
+                float(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(cache_shape)
+                if hasattr(l, "shape") and l.shape
+            ) / mesh.devices.size
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        try:
+            mem_rec[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    hlo_text = compiled.as_text()
+    hbm = roofline.analytic_hbm_bytes(
+        cfg, shape, mesh, microbatches=mb_used, kv_cache_bytes=kv_bytes_local
+    )
+    rl = roofline.analyze(compiled, chips=mesh.devices.size,
+                          model_flops=model_flops, hlo_text=hlo_text,
+                          hbm_bytes_per_device=hbm)
+    return {
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": int(mesh.devices.size),
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_rec,
+        "roofline": rl.to_dict(),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: Dict[str, Any] = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                key = f"{arch}|{shape_name}|{mesh_name}"
+                if key in results and results[key].get("status") == "ok":
+                    print(f"[skip] {key}")
+                    continue
+                if shape_name == "long_500k" and not cfg.subquadratic:
+                    results[key] = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "skipped",
+                        "reason": "full quadratic attention at 500k (DESIGN.md §4)",
+                    }
+                    _write(args.out, results)
+                    print(f"[skipped-by-design] {key}")
+                    continue
+                print(f"[lower] {key} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mesh)
+                    results[key] = rec
+                    rl = rec["roofline"]
+                    print(
+                        f"  ok  compile={rec['compile_s']}s "
+                        f"flops={rl['flops']:.3e} coll={rl['coll_bytes']:.3e} "
+                        f"bottleneck={rl['bottleneck']}", flush=True,
+                    )
+                except Exception as e:
+                    results[key] = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"  ERROR {type(e).__name__}: {str(e)[:300]}", flush=True)
+                _write(args.out, results)
+
+
+def _write(path: str, results) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,341 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA/SWA attention (chunked,
+flash-style memory footprint), SwiGLU MLP, and capacity-based MoE.
+
+Everything is a pure function over an explicit parameter dict. Parameters are
+created by the matching ``init_*`` functions which also return a *logical
+sharding spec* pytree (axis names resolved to mesh axes by
+``repro.distributed.sharding``).
+
+Logical axis vocabulary:
+    "embed"   — d_model            -> sharded on "model"
+    "heads"   — attention heads    -> "model"
+    "kv"      — kv heads           -> "model" (if divisible) else replicated
+    "mlp"     — FFN hidden         -> "model"
+    "vocab"   — vocabulary         -> "model"
+    "experts" — MoE experts        -> "model" (expert parallelism)
+    None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shard_lib
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norm / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = (x32 * x32).mean(-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / SWA), chunked over query blocks
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    dt = _dtype(cfg)
+    p = {
+        "wq": (jax.random.normal(k1, (d, nq * hd)) * scale).astype(dt),
+        "wk": (jax.random.normal(k2, (d, nkv * hd)) * scale).astype(dt),
+        "wv": (jax.random.normal(k3, (d, nkv * hd)) * scale).astype(dt),
+        "wo": (jax.random.normal(k4, (nq * hd, d)) * (nq * hd) ** -0.5).astype(dt),
+    }
+    s = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv"),
+        "wv": ("embed", "kv"),
+        "wo": ("heads", "embed"),
+    }
+    return p, s
+
+
+def _attn_mask(q_pos, k_pos, sliding_window: int, prefix_len: int = 0):
+    """(Sq, Sk) boolean mask. Causal, optional sliding window, optional
+    bidirectional prefix (PaliGemma-style prefix-LM)."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if prefix_len > 0:
+        bidir = (q_pos[:, None] < prefix_len) & (k_pos[None, :] < prefix_len)
+        causal = causal | bidir
+    if sliding_window > 0:
+        causal &= q_pos[:, None] - k_pos[None, :] < sliding_window
+    return causal
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,                  # (B, S, d)
+    cfg: ModelConfig,
+    positions: jnp.ndarray,          # (B, S)
+    kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+    q_chunk: int = 1024,
+    prefix_len: int = 0,
+    attend_cache: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """GQA attention. With ``kv_cache=(k,v)`` of shape (B, C, Hkv, hd) this is
+    a decode/prefill-extend step: new k/v are written at ``cache_len`` and
+    attention runs over the cache. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    g = nq // nkv
+
+    p = shard_lib.param_hints(p, {
+        "wq": ("embed", "heads"), "wk": ("embed", "kv"),
+        "wv": ("embed", "kv"), "wo": ("heads", "embed"),
+    })
+    q = (x @ p["wq"]).reshape(b, s, nq, hd)
+    k = (x @ p["wk"]).reshape(b, s, nkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, nkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        cap = ck.shape[1]
+        ring = cfg.sliding_window > 0 and cap <= 2 * cfg.sliding_window
+        if s > cap and not ring:
+            raise ValueError(
+                f"prefill length {s} exceeds non-ring cache capacity {cap}"
+            )
+        # write the (last cap) new k/v into the cache. Slots are pos % cap in
+        # ring mode; the slice below guarantees no duplicate slots.
+        if s >= cap:
+            offs = jnp.arange(s - cap, s)
+            kw, vw = k[:, -cap:], v[:, -cap:]
+        else:
+            offs = jnp.arange(s)
+            kw, vw = k, v
+        idx = (cache_len + offs) % cap if ring else cache_len + offs
+        ck = ck.at[:, idx].set(kw.astype(ck.dtype))
+        cv = cv.at[:, idx].set(vw.astype(cv.dtype))
+        new_cache = (ck, cv)
+        if s > 1 and not attend_cache:
+            # single-shot prefill: attend over the in-flight k/v (window mask
+            # applies); the cache is only written for subsequent decode steps
+            k_all, v_all = k, v
+            k_pos_all = positions
+        else:
+            # decode, or segmented (chunked) prefill: attend over the cache
+            # (already containing this segment's keys); absolute-position
+            # masking handles both full and ring buffers
+            k_all, v_all = ck, cv
+            k_pos_all = _cache_positions(cache_len, s, cap, ring)
+    else:
+        k_all, v_all = k, v
+        k_pos_all = positions
+
+    # grouped heads: (B, S, Hkv, G, hd) — constrain head sharding so the
+    # attention einsums stay model-parallel (GSPMD loses it through the
+    # chunking reshapes otherwise; see EXPERIMENTS.md §Perf iteration 1)
+    qg = shard_lib.hint(q.reshape(b, s, nkv, g, hd), shard_lib.qkv_spec)
+    k_all = shard_lib.hint(k_all, shard_lib.qkv_spec)
+    v_all = shard_lib.hint(v_all, shard_lib.qkv_spec)
+    scale = hd ** -0.5
+
+    def attend_chunk(q_blk, qpos_blk):
+        # q_blk (B, sq, Hkv, G, hd)
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+            k_all.astype(jnp.float32),
+        ) * scale
+        if cfg.logit_softcap > 0:
+            c = cfg.logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        mask = jax.vmap(
+            lambda qp, kp: _attn_mask(qp, kp, cfg.sliding_window, prefix_len)
+        )(qpos_blk, jnp.broadcast_to(k_pos_all, (b, k_pos_all.shape[-1])))
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum(
+            "bhgqk,bkhd->bqhgd", w.astype(v_all.dtype), v_all
+        )
+
+    if s > q_chunk and s % q_chunk == 0:
+        nchunks = s // q_chunk
+        qs = qg.reshape(b, nchunks, q_chunk, nkv, g, hd).swapaxes(0, 1)
+        ps = positions.reshape(b, nchunks, q_chunk).swapaxes(0, 1)
+        out = jax.lax.map(
+            lambda args: shard_lib.hint(
+                attend_chunk(shard_lib.hint(args[0], shard_lib.qkv_spec),
+                             args[1]),
+                shard_lib.qkv_spec,
+            ),
+            (qs, ps),
+        )
+        out = out.swapaxes(0, 1).reshape(b, s, nq * hd)
+    else:
+        out = attend_chunk(qg, positions).reshape(b, s, nq * hd)
+    out = shard_lib.hint(out, shard_lib.heads_concat_spec)
+    return out @ p["wo"], new_cache
+
+
+def _cache_positions(cache_len, s_new, cap, ring: bool):
+    """Absolute positions represented in the cache (for masking)."""
+    if ring:
+        # ring buffer: slot i holds the largest position p < total with
+        # p % cap == i; slots not yet written get a huge position (masked).
+        total = cache_len + s_new
+        slot = jnp.arange(cap)
+        last_full = total - 1
+        pos = slot + ((last_full - slot) // cap) * cap
+        pos = jnp.where((pos < total) & (pos >= 0), pos, jnp.int32(2**30))
+        return pos[None, :]
+    pos = jnp.arange(cap)
+    return jnp.where(pos < cache_len + s_new, pos, 2**30)[None, :]
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    if cfg.mlp_variant == "gelu":
+        p = {
+            "wi_up": (jax.random.normal(k2, (d, f)) * d**-0.5).astype(dt),
+            "wo": (jax.random.normal(k3, (f, d)) * f**-0.5).astype(dt),
+        }
+        s = {"wi_up": ("embed", "mlp"), "wo": ("mlp", "embed")}
+        return p, s
+    p = {
+        "wi_gate": (jax.random.normal(k1, (d, f)) * d**-0.5).astype(dt),
+        "wi_up": (jax.random.normal(k2, (d, f)) * d**-0.5).astype(dt),
+        "wo": (jax.random.normal(k3, (f, d)) * f**-0.5).astype(dt),
+    }
+    s = {"wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return p, s
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    p = shard_lib.param_hints(p, {
+        "wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"),
+        "wo": ("mlp", "embed"),
+    })
+    if "wi_gate" not in p:
+        return jax.nn.gelu(x @ p["wi_up"]) @ p["wo"]
+    return (jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])) @ p["wo"]
+
+
+def init_moe(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "router": (jax.random.normal(k1, (d, e)) * d**-0.5).astype(jnp.float32),
+        "wi_gate": (jax.random.normal(k2, (e, d, f)) * d**-0.5).astype(dt),
+        "wi_up": (jax.random.normal(k3, (e, d, f)) * d**-0.5).astype(dt),
+        "wo": (jax.random.normal(k4, (e, f, d)) * f**-0.5).astype(dt),
+    }
+    s = {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "mlp"),
+        "wi_up": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    return p, s
+
+
+def moe(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, capacity_factor: float = 1.25,
+    dispatch_hint: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k routing with SCATTER/GATHER dispatch.
+
+    The classic Shazeer dense-dispatch einsum materializes a (T, E*cap)
+    one-hot — O(T^2) at pod scale (1M tokens -> petabytes). Here each
+    (token, slot) computes its destination ``expert*cap + position`` and is
+    scattered into the (E*cap, d) expert buffer (mode="drop" implements
+    capacity dropping for free); results are gathered back with the same
+    index map. Memory is O(T*k*d), and under GSPMD the scatter/gather lower
+    to the expert-parallel all-to-alls. Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e, kk = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    p = shard_lib.param_hints(p, {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "mlp"),
+        "wi_up": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    })
+    xt = x.reshape(t, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])             # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, kk)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(np.ceil(t * kk / e * capacity_factor)), 4)
+    flat_idx = gate_idx.reshape(-1)                             # (T*k,)
+    oh = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)           # (T*k, E)
+    pos_all = jnp.cumsum(oh, axis=0) - oh                       # (T*k, E)
+    pos = jnp.take_along_axis(pos_all, flat_idx[:, None], 1)[:, 0]
+    keep = pos < cap
+    dest = jnp.where(keep, flat_idx * cap + pos, e * cap)       # OOB -> drop
+
+    x_rep = jnp.repeat(xt, kk, axis=0)                          # (T*k, d)
+    buf = jnp.zeros((e * cap, d), x.dtype).at[dest].set(x_rep, mode="drop")
+    # NOTE: the expert einsum chain is deliberately UNconstrained — GSPMD's
+    # preferred strategy is a partial expert-dim sharding that NamedSharding
+    # cannot express; forcing it inserts involuntary-rematerialization
+    # copies (EXPERIMENTS.md §Perf, hypotheses M2/M4). The dispatch-buffer
+    # hint alone is a per-arch tuning knob: it halves collective time for
+    # few-expert models (mixtral E=8) and doubles it for many-expert ones
+    # (granite E=40) — see the M4/M5 log.
+    if dispatch_hint:
+        buf = shard_lib.hint(buf, shard_lib.moe_buffer_spec)
+    xe = buf.reshape(e, cap, d)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xe, p["wi_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(e * cap, d)
+    y = ye.at[jnp.minimum(dest, e * cap - 1)].get(mode="clip")  # (T*k, d)
+    y = jnp.where(keep[:, None], y, 0.0)
+    out = (
+        (y.reshape(t, kk, d) * gate_vals[..., None].astype(y.dtype)).sum(1)
+    ).reshape(b, s, d)
+    # load-balancing aux loss (Switch-style)
+    density = jax.nn.one_hot(gate_idx, e).any(1).astype(jnp.float32).mean(0)
+    p_mean = probs.mean(0)
+    aux = (density * p_mean).sum() * (e ** 2) / kk
+    return out, aux

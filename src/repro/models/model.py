@@ -1,0 +1,602 @@
+"""Model zoo composer: builds any of the ten assigned architectures from its
+``ModelConfig`` with a uniform interface:
+
+    model = build_model(cfg)
+    params, specs = model.init(rng)          # specs: logical-axis pytree
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens)
+
+Layers are SCANNED with stacked parameters (compile time and HLO size are
+O(1) in depth — essential for the 88/95-layer archs in the dry-run), with
+``jax.checkpoint`` applied per block (remat policy configurable).
+
+Families: dense | moe | vlm (prefix-LM over stub patch embeddings) | ssm
+(Mamba-1) | hybrid (Mamba-2 + shared attention, zamba2-style) | encdec
+(audio frames -> encoder, tokens -> decoder with cross-attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    BLOCK_ATTN,
+    BLOCK_MAMBA1,
+    BLOCK_MAMBA2,
+    BLOCK_SHARED_ATTN,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    norm = lambda: jnp.zeros((cfg.d_model,), jnp.float32)
+    if kind == BLOCK_ATTN:
+        attn_p, attn_s = L.init_attention(k1, cfg)
+        if cfg.family == "moe":
+            ff_p, ff_s = L.init_moe(k2, cfg)
+        else:
+            ff_p, ff_s = L.init_mlp(k2, cfg)
+        p = {"ln1": norm(), "attn": attn_p, "ln2": norm(), "ff": ff_p}
+        s = {"ln1": ("embed",), "attn": attn_s, "ln2": ("embed",), "ff": ff_s}
+    elif kind == BLOCK_MAMBA1:
+        m_p, m_s = S.init_mamba(k1, cfg)
+        p = {"ln1": norm(), "ssm": m_p}
+        s = {"ln1": ("embed",), "ssm": m_s}
+    elif kind == BLOCK_MAMBA2:
+        # zamba2 geometry: the mamba2 blocks carry no MLP — the MLP lives in
+        # the (single, shared) attention block
+        m_p, m_s = S.init_mamba2(k1, cfg)
+        p = {"ln1": norm(), "ssm": m_p}
+        s = {"ln1": ("embed",), "ssm": m_s}
+    else:
+        raise ValueError(kind)
+    return p, s
+
+
+def _stack_init(key, cfg: ModelConfig, kind: str, n: int):
+    keys = jax.random.split(key, n)
+    p0, s0 = _init_block(keys[0], cfg, kind)
+    stacked = jax.vmap(lambda k: _init_block(k, cfg, kind)[0])(keys)
+    specs = jax.tree_util.tree_map(lambda sp: (None, *sp), s0,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, specs
+
+
+# ---------------------------------------------------------------------------
+# Cache containers
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Stacked per-layer caches + scalar fill pointer."""
+    kv_k: Optional[jnp.ndarray]       # (n_attn, B, cap, Hkv, hd)
+    kv_v: Optional[jnp.ndarray]
+    conv: Optional[jnp.ndarray]       # (n_ssm, B, conv-1, width)
+    ssm: Optional[jnp.ndarray]        # (n_ssm, B, di(, ...), ds)
+    enc_out: Optional[jnp.ndarray]    # (B, S_enc, d) — encdec only
+    length: jnp.ndarray               # () int32
+
+
+def _cache_capacity(cfg: ModelConfig, max_len: int, ring_mult: int = 1) -> int:
+    if cfg.sliding_window > 0:
+        return min(max_len, ring_mult * cfg.sliding_window)
+    return max_len
+
+
+# ---------------------------------------------------------------------------
+# The Model object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+    remat: str = "block"     # "none" | "block"
+    q_chunk: int = 1024
+    ssm_chunk: int = 256
+    moe_capacity: float = 1.25
+    moe_dispatch_hint: bool = True   # per-arch MoE layout knob (§Perf M4/M5)
+    seq_parallel: bool = False  # shard saved residuals' seq dim over "model"
+
+    def _residual_hint(self, x):
+        if not self.seq_parallel:
+            return x
+        from repro.distributed import sharding as shard_lib
+
+        return shard_lib.hint(x, shard_lib.seq_parallel_spec)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Tuple[Params, Params]:
+        cfg = self.config
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(rng, 8)
+        d = cfg.d_model
+        params: Params = {
+            "embed": (jax.random.normal(keys[0], (cfg.vocab_size, d)) * 0.02).astype(dt),
+            "ln_f": jnp.zeros((d,), jnp.float32),
+        }
+        specs: Params = {"embed": ("vocab", "embed"), "ln_f": ("embed",)}
+        if not cfg.tie_embeddings:
+            params["unembed"] = (
+                jax.random.normal(keys[1], (d, cfg.vocab_size)) * d**-0.5
+            ).astype(dt)
+            specs["unembed"] = ("embed", "vocab")
+
+        pattern = cfg.block_pattern()
+        if cfg.family in ("dense", "moe", "vlm"):
+            params["blocks"], specs["blocks"] = _stack_init(
+                keys[2], cfg, BLOCK_ATTN, cfg.num_layers
+            )
+        elif cfg.family == "ssm":
+            params["blocks"], specs["blocks"] = _stack_init(
+                keys[2], cfg, BLOCK_MAMBA1, cfg.num_layers
+            )
+        elif cfg.family == "hybrid":
+            n_m = sum(1 for b in pattern if b == BLOCK_MAMBA2)
+            params["blocks"], specs["blocks"] = _stack_init(
+                keys[2], cfg, BLOCK_MAMBA2, n_m
+            )
+            # the single SHARED attention block (weights tied across uses)
+            sp, ss = _init_block(keys[3], cfg, BLOCK_ATTN)
+            params["shared_attn"], specs["shared_attn"] = sp, ss
+        elif cfg.family == "encdec":
+            params["blocks"], specs["blocks"] = _stack_init(
+                keys[2], cfg, BLOCK_ATTN, cfg.num_layers
+            )
+            params["enc_blocks"], specs["enc_blocks"] = _stack_init(
+                keys[3], cfg, BLOCK_ATTN, cfg.encoder_layers
+            )
+            xp, xs = _stack_init(keys[4], cfg, BLOCK_ATTN, cfg.num_layers)
+            # cross-attention re-uses attention geometry (q from decoder,
+            # kv from encoder output)
+            params["cross_blocks"] = {"ln": jax.vmap(
+                lambda _: jnp.zeros((d,), jnp.float32)
+            )(jnp.arange(cfg.num_layers)), "attn": xp["attn"]}
+            specs["cross_blocks"] = {"ln": (None, "embed"),
+                                     "attn": xs["attn"]}
+        else:
+            raise ValueError(cfg.family)
+
+        if cfg.frontend_dim:
+            params["frontend_proj"] = (
+                jax.random.normal(keys[5], (cfg.frontend_dim, d))
+                * cfg.frontend_dim**-0.5
+            ).astype(dt)
+            specs["frontend_proj"] = (None, "embed")
+        return params, specs
+
+    # ------------------------------------------------------------- forwards
+    def _attn_block(self, bp, x, positions, kv=None, cache_len=None,
+                    prefix_len=0, attend_cache=False):
+        cfg = self.config
+        h, new_kv = L.attention(
+            bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cfg,
+            positions, kv_cache=kv, cache_len=cache_len,
+            q_chunk=self.q_chunk, prefix_len=prefix_len,
+            attend_cache=attend_cache,
+        )
+        x = x + h
+        y = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            ff, aux = L.moe(bp["ff"], y, cfg, self.moe_capacity,
+                            dispatch_hint=self.moe_dispatch_hint)
+        else:
+            ff, aux = L.mlp(bp["ff"], y), 0.0
+        return self._residual_hint(x + ff), new_kv, aux
+
+    def _mamba_block(self, bp, x, state=None, kind=BLOCK_MAMBA1):
+        cfg = self.config
+        fn = S.mamba if kind == BLOCK_MAMBA1 else S.mamba2
+        h, new_state = fn(
+            bp["ssm"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cfg,
+            state=state, chunk=self.ssm_chunk,
+        )
+        x = x + h
+        if "ff" in bp:
+            x = x + L.mlp(bp["ff"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+        return self._residual_hint(x), new_state
+
+    def _cross_block(self, cp, x, enc_out, enc_positions):
+        """Decoder cross-attention: q from x, kv from encoder output."""
+        cfg = self.config
+        b, s, d = x.shape
+        hd = cfg.resolved_head_dim
+        nq, nkv = cfg.num_heads, cfg.num_kv_heads
+        y = L.rms_norm(x, cp["ln"], cfg.norm_eps)
+        q = (y @ cp["attn"]["wq"]).reshape(b, s, nq, hd)
+        k = (enc_out @ cp["attn"]["wk"]).reshape(b, -1, nkv, hd)
+        v = (enc_out @ cp["attn"]["wv"]).reshape(b, -1, nkv, hd)
+        g = nq // nkv
+        qg = q.reshape(b, s, nkv, g, hd)
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+        ) * hd**-0.5
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+        return x + o.reshape(b, s, nq * hd) @ cp["attn"]["wo"]
+
+    def _maybe_remat(self, f):
+        if self.remat == "block":
+            return jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+        return f
+
+    def _decoder_stack(self, params, x, positions, caches=None, cache_len=None,
+                       prefix_len=0, enc_out=None, enc_positions=None,
+                       attend_cache=False):
+        """Runs the (scanned) decoder stack. Returns (x, new_caches, aux)."""
+        cfg = self.config
+        fam = cfg.family
+
+        if fam in ("dense", "moe", "vlm"):
+            has_cache = caches is not None
+
+            def block(carry, xs):
+                (x,) = carry
+                bp, kk, vv = xs
+                kv = (kk, vv) if has_cache else None
+                x, new_kv, aux = self._attn_block(
+                    bp, x, positions, kv, cache_len, prefix_len,
+                    attend_cache=attend_cache,
+                )
+                if new_kv is None:
+                    new_kv = (jnp.zeros((0,), x.dtype),) * 2
+                return (x,), (new_kv[0], new_kv[1], jnp.float32(aux))
+
+            xs = (params["blocks"],
+                  caches.kv_k if has_cache else jnp.zeros((cfg.num_layers, 0)),
+                  caches.kv_v if has_cache else jnp.zeros((cfg.num_layers, 0)))
+            (x,), (nk, nv, auxs) = jax.lax.scan(
+                self._maybe_remat(block), (x,), xs
+            )
+            new_caches = None
+            if has_cache:
+                new_caches = caches._replace(kv_k=nk, kv_v=nv)
+            return x, new_caches, jnp.sum(auxs)
+
+        if fam == "ssm":
+            def block(carry, xs):
+                x, = carry
+                bp, conv_st, ssm_st = xs
+                st = (conv_st, ssm_st) if caches is not None else None
+                x, new_st = self._mamba_block(bp, x, st, BLOCK_MAMBA1)
+                return (x,), new_st
+
+            blk = self._maybe_remat(block)
+            xs = (params["blocks"],
+                  caches.conv if caches is not None else jnp.zeros((cfg.num_layers, 0)),
+                  caches.ssm if caches is not None else jnp.zeros((cfg.num_layers, 0)))
+            (x,), (ncv, nss) = jax.lax.scan(blk, (x,), xs)
+            new_caches = None
+            if caches is not None:
+                new_caches = caches._replace(conv=ncv, ssm=nss)
+            return x, new_caches, 0.0
+
+        if fam == "hybrid":
+            return self._hybrid_stack(params, x, positions, caches, cache_len,
+                                      attend_cache=attend_cache)
+
+        if fam == "encdec":
+            def block(carry, xs):
+                x, = carry
+                bp, cp, kv_k, kv_v = xs
+                kv = (kv_k, kv_v) if caches is not None else None
+                x, new_kv, _ = self._attn_block(bp, x, positions, kv,
+                                                cache_len,
+                                                attend_cache=attend_cache)
+                x = self._cross_block(cp, x, enc_out, enc_positions)
+                nk, nv = (new_kv if new_kv is not None else (jnp.zeros((0,)),) * 2)
+                return (x,), (nk, nv)
+
+            blk = self._maybe_remat(block)
+            xs = (params["blocks"], params["cross_blocks"],
+                  caches.kv_k if caches is not None else jnp.zeros((cfg.num_layers, 0)),
+                  caches.kv_v if caches is not None else jnp.zeros((cfg.num_layers, 0)))
+            (x,), (nk, nv) = jax.lax.scan(blk, (x,), xs)
+            new_caches = None
+            if caches is not None:
+                new_caches = caches._replace(kv_k=nk, kv_v=nv)
+            return x, new_caches, 0.0
+
+        raise ValueError(fam)
+
+    def _hybrid_stack(self, params, x, positions, caches, cache_len,
+                      attend_cache=False):
+        """zamba2: mamba2 blocks with a SHARED attention block every
+        ``attn_every`` layers. The shared block's weights are reused at every
+        occurrence; its KV caches are per-occurrence."""
+        cfg = self.config
+        pattern = cfg.block_pattern()
+        n_att = sum(1 for b in pattern if b == BLOCK_SHARED_ATTN)
+        every = cfg.attn_every or 6
+
+        def mamba_seq(x, bps, states):
+            def blk(carry, xs):
+                x, = carry
+                bp, cv, ss = xs
+                st = (cv, ss) if caches is not None else None
+                x, new_st = self._mamba_block(bp, x, st, BLOCK_MAMBA2)
+                return (x,), new_st
+            (x,), (ncv, nss) = jax.lax.scan(self._maybe_remat(blk), (x,), (bps, *states))
+            return x, (ncv, nss)
+
+        m_per_group = every - 1
+        n_groups = n_att
+        n_m = sum(1 for b in pattern if b == BLOCK_MAMBA2)
+        tail = n_m - n_groups * m_per_group
+
+        def slice_blocks(tree, start, count):
+            return jax.tree_util.tree_map(lambda a: a[start : start + count], tree)
+
+        new_conv, new_ssm, new_k, new_v = [], [], [], []
+        mi = 0
+        for gi in range(n_groups):
+            bps = slice_blocks(params["blocks"], mi, m_per_group)
+            if caches is not None:
+                sts = (caches.conv[mi : mi + m_per_group],
+                       caches.ssm[mi : mi + m_per_group])
+            else:
+                sts = (jnp.zeros((m_per_group, 0)), jnp.zeros((m_per_group, 0)))
+            x, (ncv, nss) = mamba_seq(x, bps, sts)
+            new_conv.append(ncv)
+            new_ssm.append(nss)
+            mi += m_per_group
+            kv = None
+            if caches is not None:
+                kv = (caches.kv_k[gi], caches.kv_v[gi])
+            x, new_kv, _ = self._attn_block(
+                params["shared_attn"], x, positions, kv, cache_len,
+                attend_cache=attend_cache,
+            )
+            if new_kv is not None:
+                new_k.append(new_kv[0])
+                new_v.append(new_kv[1])
+        if tail > 0:
+            bps = slice_blocks(params["blocks"], mi, tail)
+            if caches is not None:
+                sts = (caches.conv[mi : mi + tail], caches.ssm[mi : mi + tail])
+            else:
+                sts = (jnp.zeros((tail, 0)), jnp.zeros((tail, 0)))
+            x, (ncv, nss) = mamba_seq(x, bps, sts)
+            new_conv.append(ncv)
+            new_ssm.append(nss)
+        new_caches = None
+        if caches is not None:
+            new_caches = caches._replace(
+                conv=jnp.concatenate(new_conv), ssm=jnp.concatenate(new_ssm),
+                kv_k=jnp.stack(new_k), kv_v=jnp.stack(new_v),
+            )
+        return x, new_caches, 0.0
+
+    def _encode(self, params, frames):
+        """Encoder stack over frontend frame embeddings (bidirectional)."""
+        cfg = self.config
+        x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def block(carry, bp):
+            x, = carry
+            x, _, _ = self._attn_block(bp, x, positions, prefix_len=s)
+            return (x,), None
+
+        (x,), _ = jax.lax.scan(self._maybe_remat(block), (x,), params["enc_blocks"])
+        return x, positions
+
+    def _embed_inputs(self, params, batch):
+        """tokens (+ frontend embeddings) -> (x, positions, prefix_len)."""
+        cfg = self.config
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        if cfg.family == "vlm":
+            pre = batch["frontend"].astype(x.dtype) @ params["frontend_proj"]
+            x = jnp.concatenate([pre, x], axis=1)
+            prefix = cfg.frontend_tokens
+        else:
+            prefix = 0
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        return x, positions, prefix
+
+    def _logits(self, params, x):
+        from repro.distributed import sharding as shard_lib
+
+        cfg = self.config
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = shard_lib.param_hint(params["embed"], ("vocab", "embed")).T
+        else:
+            w = shard_lib.param_hint(params["unembed"], ("embed", "vocab"))
+        logits = x @ w
+        if cfg.logit_softcap > 0:
+            c = cfg.logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        return logits
+
+    # -------------------------------------------------------------- training
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.config
+        if cfg.family == "encdec":
+            enc_out, enc_pos = self._encode(params, batch["frontend"])
+            x, positions, prefix = self._embed_inputs(params, batch)
+            x, _, aux = self._decoder_stack(
+                params, x, positions, enc_out=enc_out, enc_positions=enc_pos
+            )
+        else:
+            x, positions, prefix = self._embed_inputs(params, batch)
+            x, _, aux = self._decoder_stack(params, x, positions,
+                                            prefix_len=prefix)
+        logits = self._logits(params, x)
+        labels = batch["labels"]
+        if prefix:
+            logits = logits[:, prefix:, :]
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        total = nll + 0.01 * aux
+        return total, {"nll": nll, "aux": aux}
+
+    # -------------------------------------------------------------- serving
+    def init_cache(self, batch_size: int, max_len: int,
+                   ring_mult: int = 1) -> DecodeCache:
+        cfg = self.config
+        dt = jnp.dtype(cfg.dtype)
+        hd = cfg.resolved_head_dim
+        cap = _cache_capacity(cfg, max_len, ring_mult)
+        kv_k = kv_v = conv = ssm_st = enc = None
+        pattern = cfg.block_pattern()
+        n_attn = sum(1 for b in pattern if b in (BLOCK_ATTN, BLOCK_SHARED_ATTN))
+        n_ssm = len(pattern) - n_attn
+        if n_attn:
+            kv_k = jnp.zeros((n_attn, batch_size, cap, cfg.num_kv_heads, hd), dt)
+            kv_v = jnp.zeros_like(kv_k)
+        if cfg.family == "ssm":
+            di = cfg.ssm_expand * cfg.d_model
+            conv = jnp.zeros((n_ssm, batch_size, cfg.ssm_conv - 1, di), dt)
+            ssm_st = jnp.zeros((n_ssm, batch_size, di, cfg.ssm_state), jnp.float32)
+        elif cfg.family == "hybrid":
+            di = cfg.ssm_expand * cfg.d_model
+            width = di + 2 * cfg.ssm_state
+            nh = di // 64
+            conv = jnp.zeros((n_ssm, batch_size, cfg.ssm_conv - 1, width), dt)
+            ssm_st = jnp.zeros((n_ssm, batch_size, nh, 64, cfg.ssm_state), jnp.float32)
+        return DecodeCache(kv_k=kv_k, kv_v=kv_v, conv=conv, ssm=ssm_st,
+                           enc_out=enc, length=jnp.int32(0))
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        cfg = self.config
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        internal = s + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+        cache = self.init_cache(b, max(max_len or 0, internal + 1))
+        if cfg.family == "encdec":
+            enc_out, enc_pos = self._encode(params, batch["frontend"])
+            cache = cache._replace(enc_out=enc_out)
+            x, positions, prefix = self._embed_inputs(params, batch)
+            x, cache, _ = self._decoder_stack(
+                params, x, positions, caches=cache, cache_len=jnp.int32(0),
+                enc_out=enc_out, enc_positions=enc_pos,
+            )
+        else:
+            x, positions, prefix = self._embed_inputs(params, batch)
+            x, cache, _ = self._decoder_stack(
+                params, x, positions, caches=cache, cache_len=jnp.int32(0),
+                prefix_len=prefix,
+            )
+        cache = cache._replace(length=jnp.int32(x.shape[1]))
+        logits = self._logits(params, x[:, -1:, :])
+        return logits, cache
+
+    def prefill_chunked(self, params, batch, seg_len: int = 4096,
+                        max_len: Optional[int] = None):
+        """Segmented prefill (EXPERIMENTS.md §Perf P1): the prompt is
+        processed ``seg_len`` tokens at a time against the growing KV cache,
+        bounding attention logits and MoE dispatch buffers to one segment.
+        SWA archs use a 2x-window ring so every query's window is resident.
+        Not supported for vlm (prefix handling) or encdec (cross-attn) —
+        those use the single-shot path."""
+        cfg = self.config
+        assert cfg.family in ("dense", "moe", "ssm", "hybrid")
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        assert s % seg_len == 0, (s, seg_len)
+        if cfg.sliding_window > 0:
+            assert seg_len <= cfg.sliding_window, "segment must fit the window"
+        # SWA: a 2x-window ring keeps every in-segment query's window
+        # resident; others: full cache
+        cache = self.init_cache(b, max(max_len or 0, s + 1), ring_mult=2)
+        nseg = s // seg_len
+        segs = tokens.reshape(b, nseg, seg_len).swapaxes(0, 1)
+
+        def seg_step(cache, seg_tokens):
+            x = params["embed"][seg_tokens]
+            bsz, sl, _ = x.shape
+            positions = jnp.broadcast_to(
+                (cache.length + jnp.arange(sl))[None], (bsz, sl)
+            )
+            x, cache2, _ = self._decoder_stack(
+                params, x, positions, caches=cache, cache_len=cache.length,
+                attend_cache=True,
+            )
+            cache2 = cache2._replace(length=cache.length + sl,
+                                     enc_out=cache.enc_out)
+            return cache2, x[:, -1:, :]
+
+        cache, last_x = jax.lax.scan(seg_step, cache, segs)
+        logits = self._logits(params, last_x[-1])
+        return logits, cache
+
+    def decode_step(self, params, cache: DecodeCache, tokens: jnp.ndarray):
+        """tokens: (B, 1) — one decode step against the cache."""
+        cfg = self.config
+        x = params["embed"][tokens]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(
+            (cache.length + jnp.arange(s))[None], (b, s)
+        )
+        if cfg.family == "encdec":
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(cache.enc_out.shape[1])[None], (b, cache.enc_out.shape[1])
+            )
+            x, cache2, _ = self._decoder_stack(
+                params, x, positions, caches=cache, cache_len=cache.length,
+                enc_out=cache.enc_out, enc_positions=enc_pos,
+            )
+        else:
+            x, cache2, _ = self._decoder_stack(
+                params, x, positions, caches=cache, cache_len=cache.length,
+            )
+        cache2 = cache2._replace(length=cache.length + s,
+                                 enc_out=cache.enc_out)
+        return self._logits(params, x), cache2
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    return Model(config=cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree for every model input of a given shape cell.
+    ``train``/``prefill`` feed full sequences; ``decode`` feeds one token
+    against a cache of seq_len (built by the caller via ``init_cache``)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    batch: Dict[str, Any] = {}
+    if shape.kind == "train":
+        batch["tokens"] = sd((b, s), i32)
+        batch["labels"] = sd((b, s), i32)
+        if cfg.family == "vlm":
+            batch["frontend"] = sd((b, cfg.frontend_tokens, cfg.frontend_dim), f32)
+        if cfg.family == "encdec":
+            batch["frontend"] = sd((b, s, cfg.frontend_dim), f32)
+    elif shape.kind == "prefill":
+        batch["tokens"] = sd((b, s), i32)
+        if cfg.family == "vlm":
+            batch["frontend"] = sd((b, cfg.frontend_tokens, cfg.frontend_dim), f32)
+        if cfg.family == "encdec":
+            batch["frontend"] = sd((b, s, cfg.frontend_dim), f32)
+    else:  # decode: one new token, cache of seq_len supplied separately
+        batch["tokens"] = sd((b, 1), i32)
+    return batch

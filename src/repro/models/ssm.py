@@ -1,0 +1,268 @@
+"""Selective state-space blocks (Mamba-1 for falcon-mamba, Mamba-2/SSD for
+zamba2) — TPU-native formulation.
+
+The CUDA reference implementations use a hardware-aware fused scan kernel;
+the TPU-idiomatic equivalent (DESIGN.md §2) is a CHUNKED associative scan:
+the sequence is split into chunks of ``chunk`` steps; within a chunk the
+recurrence h_t = a_t * h_{t-1} + b_t runs as ``jax.lax.associative_scan``
+(log-depth, VPU-friendly), and a sequential ``lax.scan`` carries the
+(d_inner, d_state) boundary state across chunks. Peak memory is
+O(chunk * d_inner * d_state) instead of O(S * d_inner * d_state), which is
+what lets the 500k-token decode/prefill cells fit HBM.
+
+Decode (S=1) reuses the same cell with the carried state — the SSM's "KV
+cache" is the O(1) (d_inner, d_state) state, the reason the long_500k cell
+runs on SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shard_lib
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_mamba(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """Mamba-1 block parameters (falcon-mamba geometry)."""
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    dt_rank = max(di // 16, 1)
+    conv = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d**-0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (conv, di)) * conv**-0.5).astype(dt),
+        "x_proj": (jax.random.normal(ks[2], (di, dt_rank + 2 * ds)) * di**-0.5).astype(dt),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di)) * dt_rank**-0.5).astype(dt),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.random.default_rng(0).uniform(1e-3, 0.1, di))),
+            jnp.float32,
+        ),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di**-0.5).astype(dt),
+    }
+    s = {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "x_proj": ("mlp", None),
+        "dt_proj": (None, "mlp"),
+        "dt_bias": ("mlp",),
+        "a_log": ("mlp", None),
+        "d_skip": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+    return p, s
+
+
+def selective_scan(
+    dt_: jnp.ndarray,      # (B, S, di) input-dependent step sizes
+    a_mat: jnp.ndarray,    # (di, ds) continuous-time decay (negative)
+    xi: jnp.ndarray,       # (B, S, di) inputs
+    b_in: jnp.ndarray,     # (B, S, ds) input gates
+    c_in: jnp.ndarray,     # (B, S, ds) output gates
+    h0: jnp.ndarray,       # (B, di, ds) initial state
+    chunk: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked selective scan: h_t = exp(dt_t a) h_{t-1} + (dt_t xi_t) b_t,
+    y_t = <h_t, c_t>. The (chunk, di, ds) decay/input tensors are built
+    INSIDE the chunk loop — peak memory is O(chunk*di*ds), never
+    O(S*di*ds) (a 4.3 GB/layer difference at 4k tokens for zamba2; see
+    EXPERIMENTS.md §Perf). Returns (y (B,S,di), h_last)."""
+    bsz, s, di = xi.shape
+    ds = a_mat.shape[1]
+    if s % chunk != 0:
+        chunk = s
+    nchunks = s // chunk
+
+    def to_chunks(x):
+        return x.reshape(bsz, nchunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    dt_c, xi_c, b_c, c_c = map(to_chunks, (dt_, xi, b_in, c_in))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        dtk, xik, bk, ck = inp             # (B, chunk, ...)
+        a_bar = jnp.exp(dtk[..., None] * a_mat[None, None])   # (B,c,di,ds)
+        a_bar = shard_lib.hint(a_bar, shard_lib.ssm_state_spec)
+        b_bar = (dtk * xik)[..., None] * bk[:, :, None, :]
+        b_bar = shard_lib.hint(b_bar, shard_lib.ssm_state_spec)
+        b_bar = b_bar.at[:, 0].add(a_bar[:, 0] * h)  # fold carried state
+        _, hh = jax.lax.associative_scan(combine, (a_bar, b_bar), axis=1)
+        yk = (hh * ck[:, :, None, :]).sum(-1)        # (B, chunk, di)
+        return hh[:, -1], yk
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (dt_c, xi_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, di)
+    return y, h_last
+
+
+def mamba(
+    p: Params,
+    x: jnp.ndarray,                      # (B, S, d)
+    cfg: ModelConfig,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Mamba-1 selective SSM. ``state = (conv_state (B, conv-1, di),
+    ssm_state (B, di, ds))`` enables stateful decode. Returns (y, new_state).
+    """
+    bsz, s, d = x.shape
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    conv = cfg.ssm_conv
+    dt_rank = max(di // 16, 1)
+
+    p = shard_lib.param_hints(p, {
+        "in_proj": ("embed", "mlp"), "x_proj": ("mlp", None),
+        "dt_proj": (None, "mlp"), "out_proj": ("mlp", "embed"),
+        "conv_w": (None, "mlp"),
+    })
+    xz = x @ p["in_proj"]                               # (B, S, 2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv1d
+    if state is not None:
+        conv_state = state[0]                           # (B, conv-1, di)
+        xi_pad = jnp.concatenate([conv_state.astype(xi.dtype), xi], axis=1)
+    else:
+        xi_pad = jnp.pad(xi, ((0, 0), (conv - 1, 0), (0, 0)))
+    new_conv_state = xi_pad[:, -(conv - 1):, :] if conv > 1 else jnp.zeros(
+        (bsz, 0, di), xi.dtype
+    )
+    idx = jnp.arange(s)[:, None] + jnp.arange(conv)[None, :]
+    xw = xi_pad[:, idx, :]                              # (B, S, conv, di)
+    xi = jax.nn.silu((xw * p["conv_w"][None, None]).sum(2))
+
+    # input-dependent SSM parameters
+    proj = xi @ p["x_proj"]                             # (B, S, dt_rank+2ds)
+    dt_in = proj[..., :dt_rank]
+    b_in = proj[..., dt_rank : dt_rank + ds].astype(jnp.float32)
+    c_in = proj[..., dt_rank + ds :].astype(jnp.float32)
+    dt_ = jax.nn.softplus(
+        (dt_in @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                   # (B, S, di)
+    a = -jnp.exp(p["a_log"])                            # (di, ds)
+    xf = xi.astype(jnp.float32)
+
+    h0 = (
+        state[1].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((bsz, di, ds), jnp.float32)
+    )
+    y, h_last = selective_scan(dt_, a, xf, b_in, c_in, h0, chunk)
+    y = y + xf * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, (new_conv_state, h_last.astype(jnp.float32))
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """Mamba-2 (SSD) block: scalar decay per head; B/C shared across head dims
+    (geometry follows zamba2: d_inner = expand*d, head_dim 64)."""
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    hd = 64
+    nh = di // hd
+    conv = cfg.ssm_conv
+    ks = jax.random.split(key, 5)
+    dt = _dtype(cfg)
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * ds + nh)) * d**-0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (conv, di + 2 * ds)) * conv**-0.5).astype(dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * di**-0.5).astype(dt),
+    }
+    s = {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "dt_bias": (None,),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "norm_w": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+    return p, s
+
+
+def mamba2(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Mamba-2 / SSD with scalar per-head decay. State:
+    (conv_state (B, conv-1, di+2ds), ssm_state (B, nh, hd, ds))."""
+    from repro.models.layers import rms_norm
+
+    bsz, s, d = x.shape
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    hd = 64
+    nh = di // hd
+    conv = cfg.ssm_conv
+
+    p = shard_lib.param_hints(p, {
+        "in_proj": ("embed", "mlp"), "out_proj": ("mlp", "embed"),
+        "conv_w": (None, "mlp"),
+    })
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * ds]
+    dt_in = zxbcdt[..., -nh:]
+
+    if state is not None:
+        conv_state = state[0]
+        xbc_pad = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    else:
+        xbc_pad = jnp.pad(xbc, ((0, 0), (conv - 1, 0), (0, 0)))
+    new_conv_state = xbc_pad[:, -(conv - 1):, :] if conv > 1 else jnp.zeros(
+        (bsz, 0, xbc.shape[-1]), xbc.dtype
+    )
+    idx = jnp.arange(s)[:, None] + jnp.arange(conv)[None, :]
+    xw = xbc_pad[:, idx, :]
+    xbc = jax.nn.silu((xw * p["conv_w"][None, None]).sum(2))
+
+    xif = xbc[..., :di].astype(jnp.float32)                 # (B, S, di)
+    b_in = xbc[..., di : di + ds].astype(jnp.float32)       # (B, S, ds)
+    c_in = xbc[..., di + ds :].astype(jnp.float32)          # (B, S, ds)
+    dt_h = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    # scalar per-head decay broadcast to per-channel form for the shared scan
+    dt_ = jnp.repeat(dt_h, hd, axis=-1)                     # (B, S, di)
+    a_mat = jnp.repeat(-jnp.exp(p["a_log"]), hd)[:, None] * jnp.ones(
+        (1, ds), jnp.float32
+    )                                                       # (di, ds)
+    h0 = (
+        state[1].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((bsz, nh, hd, ds), jnp.float32)
+    )
+    y, h_last = selective_scan(
+        dt_, a_mat, xif, b_in, c_in, h0.reshape(bsz, di, ds), chunk
+    )                                                       # (B, S, di)
+    y = y + xif * jnp.repeat(p["d_skip"], hd)
+    y = y.astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, (new_conv_state, h_last.reshape(bsz, nh, hd, ds).astype(jnp.float32))

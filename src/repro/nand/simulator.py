@@ -1,0 +1,180 @@
+"""Trace-driven Proxima accelerator simulator (front-end in the spirit of the
+paper's modified NeuroSIM; back-end = device.py timing/energy).
+
+Input: a ``WorkloadTrace`` built from REAL search-counter traces
+(core/search.py SearchResult) — expansions, PQ distance counts, rerank
+counts, hot-node hits — plus the data-layout bit widths (gap encoding).
+
+Output: QPS, query latency, QPS/W, runtime breakdown (NAND access vs H-tree
+vs engine compute), and core utilization, under an M/M/1-style contention
+model across the 512 NAND cores. Reproduces the shapes of paper Figs 12-16.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.nand.device import NandConfig
+from repro.nand.engine import EngineConfig
+
+
+@dataclasses.dataclass
+class WorkloadTrace:
+    """Per-query averages from a measured search run."""
+    hops: float                 # vertex expansions (index fetches)
+    pq: float                   # PQ distance computations (code fetches)
+    acc: float                  # accurate distance computations (raw fetches)
+    hot_hops: float = 0.0       # expansions served by hot-node repetition
+    free_pq: float = 0.0        # PQ fetches covered by hot pages
+    rounds: float = 0.0
+    dim: int = 128
+    r_degree: int = 64
+    index_bits: int = 32        # 32 uncompressed; 20-26 gap-encoded
+    pq_bits: int = 256          # M=32 x 8b codes
+    raw_bytes: int = 512        # D x fp32
+    metric: str = "l2"
+    use_pq: bool = True
+
+
+@dataclasses.dataclass
+class SimResult:
+    qps: float
+    latency_us: float
+    qps_per_watt: float
+    power_w: float
+    core_utilization: float
+    breakdown: Dict[str, float]          # fractional runtime shares
+    traffic_bytes_per_query: Dict[str, float]
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _accesses_per_query(t: WorkloadTrace, nand: NandConfig):
+    """Returns (WL activations, core-busy ns, traffic bytes by category).
+
+    Each access = one WL activation; extra bytes beyond the MUX window add
+    transfer time only (device.access_latency_ns). Hot hops read the
+    co-located index+codes record in a single activation (§IV-E)."""
+    cold_hops = max(t.hops - t.hot_hops, 0.0)
+    idx_bytes_each = t.r_degree * t.index_bits / 8.0
+    hot_bytes_each = (t.r_degree * (t.index_bits + t.pq_bits) + t.pq_bits) / 8.0
+    cold_pq = max(t.pq - t.free_pq, 0.0)
+    pq_bytes_each = t.pq_bits / 8.0
+
+    n_access = cold_hops * (1 + cold_pq / max(cold_hops, 1.0)) \
+        + t.hot_hops + t.acc
+    busy_ns = (
+        cold_hops * nand.access_latency_ns(int(idx_bytes_each))
+        + t.hot_hops * nand.access_latency_ns(int(hot_bytes_each))
+        + cold_pq * nand.access_latency_ns(int(pq_bytes_each))
+        + t.acc * nand.access_latency_ns(t.raw_bytes)
+    )
+    energy_pj = (
+        cold_hops * nand.access_energy_pj(int(idx_bytes_each))
+        + t.hot_hops * nand.access_energy_pj(int(hot_bytes_each))
+        + cold_pq * nand.access_energy_pj(int(pq_bytes_each))
+        + t.acc * nand.access_energy_pj(t.raw_bytes)
+    )
+    traffic = {
+        "index": cold_hops * idx_bytes_each + t.hot_hops * hot_bytes_each,
+        "pq_codes": cold_pq * pq_bytes_each,
+        "raw": t.acc * t.raw_bytes,
+    }
+    return n_access, busy_ns, energy_pj, traffic
+
+
+def _engine_ns_per_query(t: WorkloadTrace, eng: EngineConfig) -> float:
+    ns = eng.adt_latency_ns(t.dim, t.metric) if t.use_pq else 0.0
+    per_round_pq = t.pq / max(t.rounds, 1.0)
+    ns += t.rounds * (
+        eng.pq_batch_latency_ns(per_round_pq)
+        + eng.sorter_latency_ns()
+        + 1.0  # bloom
+    )
+    ns += t.acc * eng.acc_latency_ns(t.dim)
+    return ns
+
+
+def simulate(
+    trace: WorkloadTrace,
+    nand: NandConfig = NandConfig(),
+    eng: EngineConfig = EngineConfig(),
+    n_queues: int | None = None,
+    iters: int = 40,
+) -> SimResult:
+    nq = n_queues if n_queues is not None else eng.n_queues
+    t_core = nand.read_latency_ns()
+    accesses, busy_ns_q, energy_pj_q, traffic = _accesses_per_query(trace, nand)
+    engine_ns = _engine_ns_per_query(trace, eng)
+
+    cold_hops = max(trace.hops - trace.hot_hops, 0.0)
+    hot_bytes_each = (
+        trace.r_degree * (trace.index_bits + trace.pq_bits) + trace.pq_bits
+    ) / 8.0
+    # critical path: per cold hop an index fetch followed by one (parallel)
+    # neighbour-code wave; per hot hop one single-shot activation
+    s_t0 = (
+        cold_hops * 2.0 * t_core
+        + trace.hot_hops * nand.access_latency_ns(int(hot_bytes_each))
+        + 2.0 * t_core  # rerank waves (pipelined raw fetches)
+    )
+
+    # contention equilibrium (M/M/1 per core):
+    #   latency = S/(1-rho) + E,  rho = QPS*busy/C,  QPS = Nq/latency
+    # -> quadratic  -E rho^2 + (S + E + K) rho - K = 0,  K = Nq*busy/C
+    e_ns = engine_ns
+    k = nq * busy_ns_q / nand.n_cores
+    if e_ns > 1e-12:
+        b = s_t0 + e_ns + k
+        disc = max(b * b - 4.0 * e_ns * k, 0.0)
+        rho = (b - math.sqrt(disc)) / (2.0 * e_ns)
+    else:
+        rho = k / (s_t0 + k)
+    rho = min(max(rho, 0.0), 0.95)
+    lat_ns = s_t0 / max(1.0 - rho, 0.05) + e_ns
+    qps = nq / (lat_ns * 1e-9)
+
+    # --- power
+    p_nand_w = qps * energy_pj_q * 1e-12
+    busy_frac = min(qps * engine_ns * 1e-9 / nq, 1.0)
+    queue_scale = nq / 256.0
+    p_engine_w = (
+        eng.p_static_mw * queue_scale
+        + eng.p_dynamic_mw * busy_frac * queue_scale
+    ) * 1e-3
+    power = p_nand_w + p_engine_w
+
+    nand_ns = s_t0 / max(1.0 - rho, 0.05)
+    bus_ns = sum(traffic.values()) / nand.bus_bytes_per_ns / max(nand.n_cores / 8, 1)
+    total = nand_ns + bus_ns + engine_ns
+    return SimResult(
+        qps=qps,
+        latency_us=lat_ns * 1e-3,
+        qps_per_watt=qps / max(power, 1e-9),
+        power_w=power,
+        core_utilization=rho,
+        breakdown={
+            "nand_access": nand_ns / total,
+            "htree_bus": bus_ns / total,
+            "engine": engine_ns / total,
+        },
+        traffic_bytes_per_query=traffic,
+    )
+
+
+def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
+                             metric="l2", use_pq=True, use_hot=True) -> WorkloadTrace:
+    """Average the per-query counters of a core.search SearchResult."""
+    import numpy as np
+
+    f = lambda x: float(np.asarray(x).mean())
+    return WorkloadTrace(
+        hops=f(res.n_hops), pq=f(res.n_pq), acc=f(res.n_acc),
+        hot_hops=f(res.n_hot_hops) if use_hot else 0.0,
+        free_pq=f(res.n_free_pq) if use_hot else 0.0,
+        rounds=f(res.rounds), dim=dim, r_degree=r_degree,
+        index_bits=index_bits, pq_bits=pq_bits, raw_bytes=dim * 4,
+        metric=metric, use_pq=use_pq,
+    )

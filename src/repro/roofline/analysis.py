@@ -1,0 +1,185 @@
+"""Roofline-term derivation from a compiled dry-run artifact (DESIGN.md §8).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOPs)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x ICI_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective bytes
+are NOT in cost_analysis: we parse the compiled HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Ops inside while-loop bodies appear once in the text;
+``while_trip_hint`` lets callers scale them (the Proxima search loop).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per-direction, one link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(?P<otype>\([^)]*\)|[\w\[\],\s{}]+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute|all-gather-start|all-reduce-start|"
+    r"collective-permute-start)\s*\(",
+    re.MULTILINE,
+)
+
+_SHAPE_RE = re.compile(r"(?P<dt>\w+?)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of all array shapes in an HLO type string
+    (handles tuple types '(f32[8,128], u32[])')."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind byte totals (output shapes of collective ops — the data
+    that crosses ICI)."""
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        op = m.group("op").replace("-start", "")
+        out[op] = out.get(op, 0) + _shape_bytes(m.group("otype"))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # total HLO flops (whole program, all chips)
+    hbm_bytes: float              # total bytes accessed
+    coll_bytes: float             # total collective bytes
+    coll_breakdown: Dict[str, int]
+    chips: int
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    def finalize(self, model_flops: float = 0.0) -> "Roofline":
+        self.compute_s = self.flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hbm_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.coll_bytes / (self.chips * ICI_BW)
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        self.model_flops = model_flops
+        self.useful_ratio = model_flops / self.flops if self.flops else 0.0
+        return self
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, chips: int, model_flops: float = 0.0,
+            hlo_text: Optional[str] = None,
+            hbm_bytes_per_device: Optional[float] = None) -> Roofline:
+    """Derive roofline terms from a compiled SPMD artifact.
+
+    FLOPs and collective bytes come from the structural HLO parser
+    (``hlo_parse``): per-device numbers with while-loop trip counts applied
+    (XLA's cost_analysis counts loop bodies once — useless for
+    scan-over-layers). The memory term uses the analytic per-device HBM
+    traffic if provided (``analytic_hbm_bytes``), falling back to XLA's
+    (body-once) estimate."""
+    from repro.roofline import hlo_parse
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older API returns [dict]
+        ca = ca[0]
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    parsed = hlo_parse.analyze_text(text)
+    hbm = hbm_bytes_per_device if hbm_bytes_per_device is not None else xla_bytes
+    rl = Roofline(
+        flops=parsed.flops, hbm_bytes=hbm, coll_bytes=parsed.coll_bytes,
+        coll_breakdown={k: int(v) for k, v in parsed.coll_by_kind.items()},
+        chips=chips,
+    )
+    # per-device program: terms are per-chip seconds directly
+    rl.compute_s = parsed.flops / PEAK_FLOPS
+    rl.memory_s = hbm / HBM_BW
+    rl.collective_s = parsed.coll_bytes / ICI_BW
+    terms = {"compute": rl.compute_s, "memory": rl.memory_s,
+             "collective": rl.collective_s}
+    rl.bottleneck = max(terms, key=terms.get)
+    rl.model_flops = model_flops
+    rl.useful_ratio = (
+        model_flops / (parsed.flops * chips) if parsed.flops else 0.0
+    )
+    return rl
+
+
+def train_model_flops(param_count: int, tokens: int) -> float:
+    """6*N*D rule (fwd 2ND + bwd 4ND)."""
+    return 6.0 * param_count * tokens
+
+
+def decode_model_flops(active_params: int, tokens: int) -> float:
+    """2*N per generated token (fwd only)."""
+    return 2.0 * active_params * tokens
+
+
+def analytic_hbm_bytes(
+    cfg, shape, mesh, microbatches: int = 1, kv_cache_bytes: float = 0.0
+) -> float:
+    """Per-device HBM traffic estimate (documented roofline memory model).
+
+    train (per step):
+      params: fwd read + bwd read (2 x 4B fp32), grad accumulate r/w per
+      microbatch (8B x mb), AdamW update (read p,m,v + write p,m,v = 24B)
+      activations: saved block boundaries written+read once each:
+      mb x layers x (tokens_local/mb) x d_model x 2B x 2
+    prefill: params read (4B) + activations written once + KV written
+    decode: params read (4B) + full KV cache read + O(1) writes
+    """
+    import numpy as np
+
+    n_devices = mesh.devices.size
+    msize = mesh.shape.get("model", 1)
+    dsize = int(np.prod([s for a, s in mesh.shape.items() if a != "model"]))
+    params_local = cfg.param_count() / n_devices
+    active_local = cfg.active_param_count() / n_devices
+    tokens_local = shape.global_batch * shape.seq_len / max(dsize, 1)
+    d = cfg.d_model
+    if shape.kind == "train":
+        param_traffic = params_local * (2 * 4 + 8 * microbatches + 24)
+        act_traffic = (
+            microbatches * cfg.num_layers
+            * (tokens_local / max(microbatches, 1)) * d * 2 * 2
+        )
+        return param_traffic + act_traffic
+    if shape.kind == "prefill":
+        act = cfg.num_layers * tokens_local * d * 2
+        return active_local * 4 + act + kv_cache_bytes
+    # decode: read all active params + the whole KV cache once per token
+    return active_local * 2 + kv_cache_bytes

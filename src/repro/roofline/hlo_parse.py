@@ -1,0 +1,196 @@
+"""Structural HLO cost parser.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE and has no
+notion of trip counts, which makes it useless for scan-over-layers programs
+(a 95-layer model reports 1 layer's FLOPs). This module parses the compiled
+HLO text into its computations and aggregates:
+
+  * dot/convolution FLOPs       (2 * prod(output dims) * contraction size)
+  * collective operand bytes    (all-gather / all-reduce / reduce-scatter /
+                                 all-to-all / collective-permute)
+
+through the call graph: fusions attribute to their caller; while bodies are
+multiplied by their trip count, recovered from the loop-condition comparison
+constant (lax.scan lowers to a canonical counted while). Nested loops
+multiply. Numbers are PER DEVICE (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<type>\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$"
+)
+_SHAPE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE_PARTS = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_ARGS_NAMES = re.compile(r"%([\w\.\-]+)")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "reduce-scatter-start", "collective-permute-start", "all-to-all-start",
+)
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dt = m.group(1)
+    dims = tuple(int(d) for d in m.group(2).split(",") if d) if m.group(2) else ()
+    return dt, dims
+
+
+def _all_shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    fusion_calls: List[str] = dataclasses.field(default_factory=list)
+    while_calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_constant: int = 0
+    is_entry: bool = False
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    shapes: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and ("->" in line):
+            cur = Computation(name=hdr.group(1),
+                              is_entry=line.startswith("ENTRY"))
+            comps[cur.name] = cur
+            shapes = {}
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            c = _CONSTANT.search(line)
+            if c:
+                cur.max_constant = max(cur.max_constant, int(c.group(1)))
+            continue
+        name, type_str, op = m.group("name"), m.group("type"), m.group("op")
+        sh = _first_shape(type_str)
+        if sh:
+            shapes[name] = sh
+        cm = _CONSTANT.search(line)
+        if cm:
+            cur.max_constant = max(cur.max_constant, int(cm.group(1)))
+        if op == "dot":
+            out = _first_shape(type_str)
+            contract = _CONTRACT.search(line)
+            lhs_name_m = _ARGS_NAMES.search(m.group("args"))
+            flops = 0.0
+            if out is not None:
+                n_out = 1
+                for d in out[1]:
+                    n_out *= d
+                csize = 1
+                if contract and lhs_name_m:
+                    lhs = shapes.get(lhs_name_m.group(1))
+                    if lhs:
+                        for d in contract.group(1).split(","):
+                            if d and int(d) < len(lhs[1]):
+                                csize *= lhs[1][int(d)]
+                flops = 2.0 * n_out * csize
+            cur.flops += flops
+        elif op in ("convolution",):
+            out = _first_shape(type_str)
+            if out is not None:
+                n_out = 1
+                for d in out[1]:
+                    n_out *= d
+                cur.flops += 2.0 * n_out  # lower bound (no kernel dims)
+        elif op in _COLLECTIVES:
+            kind = op.replace("-start", "")
+            b = _all_shape_bytes(type_str)
+            cur.coll_bytes += b
+            cur.coll_by_kind[kind] = cur.coll_by_kind.get(kind, 0.0) + b
+        elif op == "while":
+            w = _WHILE_PARTS.search(line)
+            if w:
+                cur.while_calls.append((w.group(1), w.group(2)))
+        if "calls=" in line and op != "while":
+            for cm2 in _CALLS.finditer(line):
+                cur.fusion_calls.append(cm2.group(1))
+    return comps
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float                  # per device, trip-scaled
+    coll_bytes: float             # per device, trip-scaled
+    coll_by_kind: Dict[str, float]
+
+
+def aggregate(comps: Dict[str, Computation]) -> HloCost:
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def total(name: str, stack=()) -> Tuple[float, float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return 0.0, 0.0, {}
+        c = comps[name]
+        fl, cb = c.flops, c.coll_bytes
+        kinds = dict(c.coll_by_kind)
+        for f in c.fusion_calls:
+            f2, c2, k2 = total(f, stack + (name,))
+            fl += f2
+            cb += c2
+            for k, v in k2.items():
+                kinds[k] = kinds.get(k, 0.0) + v
+        for cond, body in c.while_calls:
+            trips = max(comps.get(cond, Computation(cond)).max_constant, 1)
+            f2, c2, k2 = total(body, stack + (name,))
+            fl += trips * f2
+            cb += trips * c2
+            for k, v in k2.items():
+                kinds[k] = kinds.get(k, 0.0) + trips * v
+        memo[name] = (fl, cb, kinds)
+        return memo[name]
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloCost(0.0, 0.0, {})
+    fl, cb, kinds = total(entry)
+    return HloCost(flops=fl, coll_bytes=cb, coll_by_kind=kinds)
+
+
+def analyze_text(text: str) -> HloCost:
+    return aggregate(parse_hlo(text))

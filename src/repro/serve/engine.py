@@ -1,0 +1,107 @@
+"""Batched ANN-search serving engine — the software twin of the paper's
+search-engine frontend (scheduler + N_q queues, §IV-D).
+
+Requests arrive individually; the scheduler packs them into fixed-size
+batches (the JAX search is compiled for a fixed query-batch shape = the
+ASIC's queue count) with a flush timeout, runs the compiled search, and
+completes futures. Single-threaded event-loop style, deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import SearchConfig
+from repro.core import search
+from repro.core.index import ProximaIndex
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    query: np.ndarray
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    ids: Optional[np.ndarray] = None
+    dists: Optional[np.ndarray] = None
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_submit) * 1e3
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        index: ProximaIndex,
+        batch_size: int = 32,
+        cfg: Optional[SearchConfig] = None,
+        flush_us: float = 2000.0,
+    ):
+        self.index = index
+        self.corpus = index.corpus()
+        self.cfg = cfg or index.config.search
+        self.metric = index.dataset.metric
+        self.batch_size = batch_size
+        self.flush_us = flush_us
+        self.queue: Deque[Request] = deque()
+        self.done: Dict[int, Request] = {}
+        self._next = 0
+        self._last_flush = time.time()
+        self.stats = {"batches": 0, "queries": 0, "pad_fraction": 0.0}
+        # warm the compile with a dummy batch
+        dummy = np.zeros((batch_size, index.dataset.dim), np.float32)
+        jax.block_until_ready(
+            search(self.corpus, dummy, self.cfg, self.metric).ids
+        )
+
+    def submit(self, query: np.ndarray) -> int:
+        rid = self._next
+        self._next += 1
+        self.queue.append(Request(rid=rid, query=np.asarray(query, np.float32),
+                                  t_submit=time.time()))
+        return rid
+
+    def _flush_due(self) -> bool:
+        if len(self.queue) >= self.batch_size:
+            return True
+        return (
+            bool(self.queue)
+            and (time.time() - self._last_flush) * 1e6 >= self.flush_us
+        )
+
+    def step(self, force: bool = False) -> List[Request]:
+        """Run one batch if due; returns completed requests."""
+        if not (force and self.queue) and not self._flush_due():
+            return []
+        batch = [self.queue.popleft()
+                 for _ in range(min(self.batch_size, len(self.queue)))]
+        n = len(batch)
+        q = np.stack([r.query for r in batch])
+        if n < self.batch_size:  # pad to the compiled shape
+            q = np.concatenate(
+                [q, np.zeros((self.batch_size - n, q.shape[1]), np.float32)]
+            )
+        res = search(self.corpus, q, self.cfg, self.metric)
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        now = time.time()
+        for i, r in enumerate(batch):
+            r.ids, r.dists, r.t_done = ids[i], dists[i], now
+            self.done[r.rid] = r
+        self.stats["batches"] += 1
+        self.stats["queries"] += n
+        self.stats["pad_fraction"] += (self.batch_size - n) / self.batch_size
+        self._last_flush = now
+        return batch
+
+    def drain(self) -> List[Request]:
+        out = []
+        while self.queue:
+            out.extend(self.step(force=True))
+        return out

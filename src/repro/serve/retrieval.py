@@ -1,0 +1,69 @@
+"""Embedding-corpus retrieval backed by Proxima — the integration point
+between the model zoo and the paper's technique (DESIGN.md §4).
+
+Any architecture's encoder output can feed the index; ``EmbeddingRetriever``
+takes an embedding function (e.g. a VLM backbone over patch embeddings, or
+an LM's final hidden state) plus a corpus, builds the Proxima index offline,
+and serves kNN queries through the batched engine.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.configs.base import (
+    DatasetConfig, GraphConfig, PQConfig, ProximaConfig, SearchConfig,
+)
+from repro.core.dataset import Dataset, exact_knn
+from repro.core.index import ProximaIndex, build_index
+
+
+class EmbeddingRetriever:
+    def __init__(
+        self,
+        embeddings: np.ndarray,          # (N, D) corpus embeddings
+        metric: str = "angular",
+        pq_subvectors: Optional[int] = None,
+        max_degree: int = 32,
+        hot_fraction: float = 0.03,
+        search: Optional[SearchConfig] = None,
+    ):
+        n, d = embeddings.shape
+        m = pq_subvectors or max(
+            mm for mm in (8, 16, 25, 32) if d % mm == 0
+        )
+        cfg = ProximaConfig(
+            dataset=DatasetConfig(name="corpus", num_base=n, num_queries=1,
+                                  dim=d, metric=metric),
+            pq=PQConfig(num_subvectors=m, num_centroids=min(256, max(n // 4, 16))),
+            graph=GraphConfig(max_degree=max_degree,
+                              build_list_size=2 * max_degree),
+            search=search or SearchConfig(k=10, list_size=64, t_init=16,
+                                          t_step=8, repetition_rate=2,
+                                          beta=1.06),
+            hot_node_fraction=hot_fraction,
+        )
+        queries = embeddings[:1]
+        ds = Dataset(
+            base=np.asarray(embeddings, np.float32),
+            queries=np.asarray(queries, np.float32),
+            gt=exact_knn(queries, embeddings, min(10, n), metric),
+            metric=metric,
+            config=cfg.dataset,
+        )
+        self.index: ProximaIndex = build_index(cfg, dataset=ds,
+                                               reorder_samples=64)
+
+    def query(self, q: np.ndarray, k: int = 10):
+        from repro.core import search
+        import dataclasses as dc
+
+        cfg = dc.replace(self.index.config.search, k=k)
+        res = search(self.index.corpus(), np.atleast_2d(np.asarray(q, np.float32)),
+                     cfg, self.index.dataset.metric)
+        ids = np.asarray(res.ids)
+        # map back to pre-reorder corpus ids
+        if self.index.reordering is not None:
+            ids = self.index.reordering.inv[np.clip(ids, 0, None)]
+        return ids, np.asarray(res.dists)

@@ -1,0 +1,35 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 device; only launch/dryrun.py forces 512 host devices
+(and the distributed tests spawn subprocesses that set their own flags)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs.base import (  # noqa: E402
+    DatasetConfig, GraphConfig, PQConfig, ProximaConfig, SearchConfig,
+)
+
+
+@pytest.fixture(scope="session")
+def tiny_proxima_cfg():
+    return ProximaConfig(
+        dataset=DatasetConfig(name="sift-like", num_base=1500, num_queries=24,
+                              dim=64, num_clusters=12, cluster_std=0.3, seed=0),
+        pq=PQConfig(num_subvectors=32, num_centroids=128, kmeans_iters=8),
+        graph=GraphConfig(max_degree=24, build_list_size=48, alpha=1.2),
+        search=SearchConfig(k=10, list_size=64, t_init=16, t_step=8,
+                            repetition_rate=3, beta=1.06),
+        hot_node_fraction=0.03,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_index(tiny_proxima_cfg):
+    from repro.core import build_index
+
+    return build_index(tiny_proxima_cfg, reorder_samples=24)

@@ -1,0 +1,46 @@
+"""Bloom filter: no false negatives (property), FPR near analytic bound."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200,
+                unique=True))
+def test_no_false_negatives(ids):
+    bits = bloom.bloom_init(1 << 14)
+    arr = jnp.asarray(np.asarray(ids, np.int32))
+    bits = bloom.insert(bits, arr, jnp.ones(len(ids), bool))
+    assert bool(bloom.contains(bits, arr).all())
+
+
+def test_masked_insert_not_present():
+    bits = bloom.bloom_init(1 << 14)
+    ids = jnp.arange(100, dtype=jnp.int32)
+    mask = ids < 50
+    bits = bloom.insert(bits, ids, mask)
+    assert bool(bloom.contains(bits, ids[:50]).all())
+    # unmasked half should mostly be absent (tiny FPR allowed)
+    fp = float(bloom.contains(bits, ids[50:]).mean())
+    assert fp < 0.05
+
+
+def test_fpr_close_to_analytic():
+    m_bits, k, n = 1 << 15, 8, 1000
+    rng = np.random.default_rng(0)
+    inserted = rng.choice(2**30, size=n, replace=False).astype(np.int32)
+    probes = rng.choice(2**30, size=4000, replace=False).astype(np.int32)
+    probes = np.setdiff1d(probes, inserted)
+    bits = bloom.bloom_init(m_bits)
+    bits = bloom.insert(bits, jnp.asarray(inserted), jnp.ones(n, bool), k)
+    fpr = float(bloom.contains(bits, jnp.asarray(probes), k).mean())
+    bound = bloom.false_positive_rate(m_bits, k, n)
+    assert fpr <= max(5 * bound, 0.01), (fpr, bound)
+
+
+def test_paper_design_point():
+    """12kB SRAM + 8 hashes at 8000 insertions -> FPR < 0.02% (paper §IV-D).
+    (The paper's arithmetic; our init uses a power-of-two 16 kB array.)"""
+    assert bloom.false_positive_rate(12 * 1024 * 8, 8, 8000) < 0.02

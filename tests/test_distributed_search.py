@@ -1,0 +1,55 @@
+"""Distributed Proxima search (shard_map over 8 host devices) must be
+bit-identical to single-device search in both dataflow modes. Runs in a
+subprocess because XLA device count is locked at first jax init."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.configs.base import (ProximaConfig, DatasetConfig, PQConfig,
+                                GraphConfig, SearchConfig)
+from repro.core import build_index, search
+from repro.core.distributed import shard_corpus, distributed_search
+from repro.launch.mesh import make_mesh
+
+cfg = ProximaConfig(
+    dataset=DatasetConfig(name="sift-like", num_base=1200, num_queries=16,
+                          dim=64, num_clusters=12, seed=0),
+    pq=PQConfig(num_subvectors=16, num_centroids=64, kmeans_iters=5),
+    graph=GraphConfig(max_degree=16, build_list_size=32),
+    search=SearchConfig(k=10, list_size=48, t_init=16, t_step=8,
+                        repetition_rate=2, beta=1.06),
+    hot_node_fraction=0.03,
+)
+idx = build_index(cfg, reorder_samples=16)
+res = search(idx.corpus(), idx.dataset.queries, cfg.search, idx.dataset.metric)
+single = np.sort(np.asarray(res.ids), axis=1)
+
+mesh = make_mesh((4, 2), ("data", "model"))
+sc = shard_corpus(idx.graph.adjacency, idx.codes, idx._search_base(),
+                  idx.codebook.centroids, idx.graph.entry_point,
+                  idx.hot_count, num_shards=4)
+for mode in ("nsp", "fetch"):
+    ids, d = distributed_search(sc, idx.dataset.queries, cfg.search,
+                                idx.dataset.metric, mode=mode, mesh=mesh)
+    got = np.sort(np.asarray(ids), axis=1)
+    match = (got == single).mean()
+    assert match == 1.0, f"mode={mode}: match={match}"
+    print(f"mode={mode}: exact match")
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout

@@ -1,0 +1,41 @@
+"""Launch-layer integration: lower_cell compiles a full-size architecture on
+a small host-device mesh and produces a complete roofline record. Runs in a
+subprocess (device count is locked at first jax init)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.configs import SHAPES
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import lower_cell
+
+mesh = make_mesh((2, 4), ("data", "model"))
+for shape_name in ("train_4k", "decode_32k"):
+    rec = lower_cell("stablelm-1.6b", SHAPES[shape_name], mesh,
+                     microbatches=4 if shape_name == "train_4k" else None)
+    assert rec["status"] == "ok", rec
+    rl = rec["roofline"]
+    assert rl["flops"] > 0 and rl["coll_bytes"] >= 0
+    assert rl["bottleneck"] in ("compute", "memory", "collective")
+    assert 0 < rl["useful_ratio"] < 1.5
+    assert rec["memory"].get("temp_size_in_bytes", 0) > 0
+    print(shape_name, "ok", rl["bottleneck"])
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_lower_cell_small_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "OK" in out.stdout

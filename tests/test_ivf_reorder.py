@@ -1,0 +1,72 @@
+"""IVF-PQ baseline behaviour + graph reordering correctness."""
+import numpy as np
+import pytest
+
+from repro.configs.base import DatasetConfig, GraphConfig, PQConfig
+from repro.core import recall_at_k
+from repro.core.dataset import make_dataset
+from repro.core.graph import build_graph
+from repro.core.ivf import build_ivf, search_ivf
+from repro.core.reorder import reorder_graph, remap_ground_truth
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset(DatasetConfig(name="sift-like", num_base=1500,
+                                      num_queries=24, dim=64,
+                                      num_clusters=12, seed=0))
+
+
+def test_ivf_recall_monotone_in_nprobe(ds):
+    idx = build_ivf(ds.base, PQConfig(num_subvectors=16, num_centroids=64,
+                                      kmeans_iters=5), ds.metric, nlist=32)
+    recalls = []
+    for nprobe in (1, 4, 16):
+        ids, _, _ = search_ivf(idx, ds.queries, 10, nprobe=nprobe)
+        recalls.append(recall_at_k(ids, ds.gt, 10))
+    assert recalls[0] <= recalls[1] <= recalls[2] + 1e-9
+    assert recalls[-1] > 0.3
+
+
+def test_reordering_preserves_graph_semantics(ds):
+    g = build_graph(ds.base, GraphConfig(max_degree=16, build_list_size=32),
+                    ds.metric)
+    n = g.num_vertices
+    freq = np.random.default_rng(0).integers(0, 50, n)
+    g2, reord = reorder_graph(g, freq, hot_fraction=0.03)
+    # permutation is a bijection
+    assert sorted(reord.perm.tolist()) == list(range(n))
+    # entry point is the hottest id
+    assert g2.entry_point == 0
+    # edges are preserved under the relabeling
+    for old_v in range(0, n, max(n // 40, 1)):
+        new_v = reord.perm[old_v]
+        old_edges = set(g.adjacency[old_v, : g.degrees[old_v]].tolist())
+        new_edges = set(g2.adjacency[new_v, : g2.degrees[new_v]].tolist())
+        assert {int(reord.perm[e]) for e in old_edges} == new_edges
+    # ground-truth remap keeps recall vs permuted base exact
+    gt2 = remap_ground_truth(reord, ds.gt)
+    from repro.core.dataset import exact_knn
+    base2 = ds.base[reord.inv]
+    gt_direct = exact_knn(ds.queries, base2, 10, ds.metric)
+    assert (gt2[:, :10] == gt_direct).mean() > 0.99
+
+
+def test_system_end_to_end(tiny_index):
+    """Deliverable (c) integration: index -> search -> NAND projection."""
+    import numpy as np
+    from repro.core import search
+    from repro.nand.simulator import simulate, trace_from_search_result
+
+    idx = tiny_index
+    res = search(idx.corpus(), idx.dataset.queries, idx.config.search,
+                 idx.dataset.metric)
+    rec = recall_at_k(np.asarray(res.ids), idx.dataset.gt, 10)
+    assert rec > 0.8
+    tr = trace_from_search_result(
+        res, dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+        index_bits=idx.gap.bit_width, pq_bits=idx.codebook.num_subvectors * 8,
+        metric=idx.dataset.metric)
+    r = simulate(tr)
+    assert r.qps > 1e4 and r.qps_per_watt > 1e3
+    assert 0 < r.core_utilization < 1

@@ -1,0 +1,78 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("q,m,c,dsub", [(1, 8, 64, 2), (8, 16, 256, 4),
+                                        (4, 32, 256, 3), (2, 25, 128, 4)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_pq_adt_sweep(q, m, c, dsub, metric):
+    qs = jnp.asarray(RNG.standard_normal((q, m * dsub)), jnp.float32)
+    cents = jnp.asarray(RNG.standard_normal((m, c, dsub)), jnp.float32)
+    got = ops.pq_adt(qs, cents, metric)
+    want = ops.pq_adt_ref(qs, cents, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,c", [(1, 8, 16), (37, 16, 64), (300, 32, 256)])
+def test_pq_lookup_sweep(n, m, c):
+    codes = jnp.asarray(RNG.integers(0, c, (n, m)), jnp.uint8)
+    adt = jnp.asarray(RNG.standard_normal((m, c)), jnp.float32)
+    got = ops.pq_lookup(codes, adt)
+    want = ops.pq_lookup_ref(codes, adt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("q,l", [(1, 32), (5, 64), (16, 256)])
+def test_bitonic_sweep(q, l):
+    keys = jnp.asarray(RNG.standard_normal((q, l)), jnp.float32)
+    vals = jnp.asarray(RNG.integers(0, 1 << 20, (q, l)), jnp.int32)
+    gk, gv = ops.bitonic_sort_pairs(keys, vals)
+    wk, wv = ops.bitonic_sort_pairs_ref(keys, vals)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(wk))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 64, 128]))
+def test_bitonic_property(seed, l):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.standard_normal((3, l)), jnp.float32)
+    vals = jnp.asarray(np.tile(np.arange(l, dtype=np.int32), (3, 1)))
+    gk, gv = ops.bitonic_sort_pairs(keys, vals)
+    gk, gv = np.asarray(gk), np.asarray(gv)
+    assert (np.diff(gk, axis=1) >= 0).all()
+    # payload is the inverse permutation: gathering keys by it reproduces gk
+    orig = np.asarray(keys)
+    np.testing.assert_array_equal(
+        np.take_along_axis(orig, gv, axis=1), gk
+    )
+
+
+@pytest.mark.parametrize("q,k,d", [(1, 16, 32), (6, 64, 128), (3, 128, 96)])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_l2_rerank_sweep(q, k, d, metric):
+    qs = jnp.asarray(RNG.standard_normal((q, d)), jnp.float32)
+    cands = jnp.asarray(RNG.standard_normal((q, k, d)), jnp.float32)
+    got = ops.l2_rerank(qs, cands, metric)
+    want = ops.l2_rerank_ref(qs, cands, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_bf16_lookup_tolerance():
+    """bf16 ADT path (serving dtype) stays within bf16 epsilon of f32."""
+    codes = jnp.asarray(RNG.integers(0, 256, (64, 32)), jnp.uint8)
+    adt = jnp.asarray(RNG.standard_normal((32, 256)), jnp.float32)
+    got32 = np.asarray(ops.pq_lookup(codes, adt))
+    got16 = np.asarray(ops.pq_lookup(codes, adt.astype(jnp.bfloat16).astype(jnp.float32)))
+    np.testing.assert_allclose(got32, got16, rtol=0.05, atol=0.3)

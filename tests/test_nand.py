@@ -1,0 +1,80 @@
+"""3D NAND device + accelerator simulator sanity (paper design points)."""
+import dataclasses
+
+import pytest
+
+from repro.nand.device import NandConfig
+from repro.nand.engine import EngineConfig
+from repro.nand.simulator import WorkloadTrace, simulate
+
+
+@pytest.fixture(scope="module")
+def nand():
+    return NandConfig()
+
+
+def test_proxima_core_design_point(nand):
+    assert nand.read_latency_ns() < 300          # §IV-C
+    assert 100 <= nand.page_bytes <= 160         # ~128 B granularity
+    gb = nand.capacity_bits / 1e9
+    assert 400 <= gb <= 520                      # ~432 Gb
+
+
+def test_ssd_class_pages_are_slow(nand):
+    # Fig 9: large pages + many blocks -> 10^4+ ns
+    assert nand.read_latency_ns(page_bytes=8192, n_block=1024) > 1e4
+
+
+def test_one_shot_hot_access(nand):
+    """Reading a co-located hot record costs ONE activation + transfer,
+    far below separate activations (§IV-E)."""
+    hot_bytes = 2256
+    one_shot = nand.access_latency_ns(hot_bytes)
+    separate = 2 * nand.read_latency_ns()
+    assert one_shot < separate
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return WorkloadTrace(hops=40, pq=200, acc=60, hot_hops=20, free_pq=100,
+                         rounds=40, dim=128, r_degree=64, index_bits=22,
+                         pq_bits=256)
+
+
+def test_queue_scaling_monotone(trace):
+    prev_qps, prev_util = 0.0, 0.0
+    for nq in (32, 64, 128, 256):
+        r = simulate(trace, n_queues=nq)
+        assert r.qps > prev_qps
+        assert r.core_utilization >= prev_util
+        prev_qps, prev_util = r.qps, r.core_utilization
+
+
+def test_queue_efficiency_declines(trace):
+    r32 = simulate(trace, n_queues=32)
+    r512 = simulate(trace, n_queues=512)
+    assert r512.qps_per_watt < r32.qps_per_watt   # paper Fig 16
+
+
+def test_hot_nodes_help(trace):
+    cold = dataclasses.replace(trace, hot_hops=0.0, free_pq=0.0)
+    r_hot = simulate(trace)
+    r_cold = simulate(cold)
+    assert r_hot.qps > r_cold.qps
+    assert r_hot.latency_us < r_cold.latency_us
+
+
+def test_pq_beats_accurate_traversal():
+    pq = WorkloadTrace(hops=40, pq=200, acc=60, rounds=40, dim=128,
+                       r_degree=64, index_bits=22, pq_bits=256)
+    acc = WorkloadTrace(hops=75, pq=0, acc=240, rounds=75, dim=128,
+                        r_degree=64, index_bits=32, pq_bits=0, use_pq=False)
+    r_pq, r_acc = simulate(pq), simulate(acc)
+    assert r_pq.qps > 1.5 * r_acc.qps             # paper Fig 13: ~2x
+    assert r_pq.qps_per_watt > r_acc.qps_per_watt
+
+
+def test_access_bound_breakdown(trace):
+    cold = dataclasses.replace(trace, hot_hops=0.0, free_pq=0.0)
+    r = simulate(cold)
+    assert r.breakdown["nand_access"] > 0.6       # paper Fig 15: ~80%

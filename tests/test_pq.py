@@ -1,0 +1,82 @@
+"""PQ unit + property tests (paper §III-B, Eq. 3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import PQConfig
+from repro.core import pq as pqm
+from repro.core.dataset import pairwise_dist
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((800, 32)).astype(np.float32)
+
+
+def test_encode_shapes_and_range(data):
+    cb = pqm.train_pq(data, PQConfig(num_subvectors=8, num_centroids=16,
+                                     kmeans_iters=4))
+    codes = np.asarray(pqm.encode(jnp.asarray(data), jnp.asarray(cb.centroids)))
+    assert codes.shape == (800, 8)
+    assert codes.dtype == np.uint8
+    assert codes.max() < 16
+
+
+def test_quantization_error_decreases_with_centroids(data):
+    errs = []
+    for c in (4, 16, 64):
+        cb = pqm.train_pq(data, PQConfig(num_subvectors=8, num_centroids=c,
+                                         kmeans_iters=6))
+        codes = np.asarray(pqm.encode(jnp.asarray(data), jnp.asarray(cb.centroids)))
+        rec = pqm.decode(codes, cb.centroids)
+        errs.append(float(((data - rec) ** 2).sum(-1).mean()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_adt_distance_matches_decoded_distance(data):
+    """Eq. 3: sum of ADT lookups == exact distance to the decoded vector."""
+    cb = pqm.train_pq(data, PQConfig(num_subvectors=8, num_centroids=16,
+                                     kmeans_iters=4))
+    codes = pqm.encode(jnp.asarray(data), jnp.asarray(cb.centroids))
+    q = jnp.asarray(data[0] + 0.1)
+    adt = pqm.compute_adt(q, jnp.asarray(cb.centroids), "l2")
+    d_pq = np.asarray(pqm.pq_distance(codes, adt))
+    rec = pqm.decode(np.asarray(codes), cb.centroids)
+    d_exact = pairwise_dist(np.asarray(q)[None], rec, "l2")[0]
+    np.testing.assert_allclose(d_pq, d_exact, rtol=2e-4, atol=2e-4)
+
+
+def test_adt_ip_metric(data):
+    cb = pqm.train_pq(data, PQConfig(num_subvectors=8, num_centroids=16,
+                                     kmeans_iters=4), metric="ip")
+    codes = pqm.encode(jnp.asarray(data), jnp.asarray(cb.centroids))
+    q = jnp.asarray(data[1])
+    adt = pqm.compute_adt(q, jnp.asarray(cb.centroids), "ip")
+    d_pq = np.asarray(pqm.pq_distance(codes, adt))
+    rec = pqm.decode(np.asarray(codes), cb.centroids)
+    np.testing.assert_allclose(d_pq, -(rec @ np.asarray(q)), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_calibrate_beta_reasonable(data):
+    cb = pqm.train_pq(data, PQConfig(num_subvectors=8, num_centroids=64,
+                                     kmeans_iters=6))
+    codes = np.asarray(pqm.encode(jnp.asarray(data), jnp.asarray(cb.centroids)))
+    beta = pqm.calibrate_beta(cb, codes, data, np.random.default_rng(0),
+                              num_samples=32, num_targets=128)
+    assert 1.0 <= beta < 3.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 16))
+def test_pq_distance_property(m_pow, c):
+    """pq_distance == brute-force table lookup for random codes/tables."""
+    m = 2 ** (m_pow - 1)
+    rng = np.random.default_rng(m * 100 + c)
+    adt = rng.standard_normal((m, c)).astype(np.float32)
+    codes = rng.integers(0, c, (32, m)).astype(np.uint8)
+    got = np.asarray(pqm.pq_distance(jnp.asarray(codes), jnp.asarray(adt)))
+    want = adt[np.arange(m)[None, :], codes.astype(int)].sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

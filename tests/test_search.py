@@ -1,0 +1,107 @@
+"""Algorithm 1 behaviour: JAX search vs the Python reference oracle, recall
+targets, and the paper's claimed effects (ET cuts hops; beta-rerank recovers
+PQ casualties; PQ+rerank ~ exact traversal at far fewer accurate dists)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SearchConfig
+from repro.core import recall_at_k, search, search_reference
+
+
+def _run(idx, cfg):
+    return search(idx.corpus(), idx.dataset.queries, cfg, idx.dataset.metric)
+
+
+def test_matches_reference_oracle(tiny_index):
+    idx = tiny_index
+    cfg = idx.config.search
+    res = _run(idx, cfg)
+    ids = np.asarray(res.ids)
+    agree = 0
+    n = 8
+    for i in range(n):
+        rid, _, cnt = search_reference(
+            idx.graph.adjacency, idx.graph.degrees, idx.codes,
+            idx._search_base(), idx.codebook.centroids,
+            idx.graph.entry_point, idx.dataset.queries[i], cfg,
+            idx.dataset.metric, hot_count=idx.hot_count,
+        )
+        agree += len(set(rid.tolist()) & set(ids[i].tolist()))
+    assert agree / (n * cfg.k) > 0.9  # Bloom FPs may cause rare divergence
+
+
+def test_recall_and_counters(tiny_index):
+    idx = tiny_index
+    res = _run(idx, idx.config.search)
+    rec = recall_at_k(np.asarray(res.ids), idx.dataset.gt, 10)
+    assert rec > 0.8, f"recall {rec}"
+    assert np.asarray(res.n_hops).mean() > 3
+    assert np.asarray(res.n_pq).mean() > np.asarray(res.n_acc).mean(), \
+        "PQ traversal should do most distance work with cheap PQ distances"
+
+
+def test_early_termination_cuts_hops(tiny_index):
+    idx = tiny_index
+    no_et = dataclasses.replace(idx.config.search, early_termination=False)
+    et = idx.config.search
+    r_no = _run(idx, no_et)
+    r_et = _run(idx, et)
+    rec_no = recall_at_k(np.asarray(r_no.ids), idx.dataset.gt, 10)
+    rec_et = recall_at_k(np.asarray(r_et.ids), idx.dataset.gt, 10)
+    assert np.asarray(r_et.n_hops).mean() < np.asarray(r_no.n_hops).mean()
+    assert rec_et >= rec_no - 0.05  # ~equal recall (paper §III-D)
+
+
+def test_beta_rerank_monotone_cost(tiny_index):
+    idx = tiny_index
+    accs = []
+    for beta in (1.0, 1.1, 1.5):
+        cfg = dataclasses.replace(idx.config.search, beta=beta)
+        accs.append(float(np.asarray(_run(idx, cfg).n_acc).mean()))
+    assert accs[0] <= accs[1] <= accs[2]
+
+
+def test_pq_vs_exact_traversal(tiny_index):
+    idx = tiny_index
+    exact = dataclasses.replace(idx.config.search, use_pq=False,
+                                early_termination=False)
+    pq = idx.config.search
+    r_ex = _run(idx, exact)
+    r_pq = _run(idx, pq)
+    rec_ex = recall_at_k(np.asarray(r_ex.ids), idx.dataset.gt, 10)
+    rec_pq = recall_at_k(np.asarray(r_pq.ids), idx.dataset.gt, 10)
+    assert rec_pq >= rec_ex - 0.1
+    # the paper's core claim: far fewer accurate distance computations
+    assert (np.asarray(r_pq.n_acc).mean()
+            < 0.6 * np.asarray(r_ex.n_acc).mean())
+
+
+def test_rerank_improves_over_raw_pq(tiny_index):
+    idx = tiny_index
+    no_rr = dataclasses.replace(idx.config.search, rerank=False,
+                                early_termination=False)
+    rr = dataclasses.replace(idx.config.search, early_termination=False)
+    rec_no = recall_at_k(np.asarray(_run(idx, no_rr).ids), idx.dataset.gt, 10)
+    rec_rr = recall_at_k(np.asarray(_run(idx, rr).ids), idx.dataset.gt, 10)
+    assert rec_rr >= rec_no
+
+
+def test_hot_node_counters(tiny_index):
+    idx = tiny_index
+    assert idx.hot_count > 0
+    res = _run(idx, idx.config.search)
+    # reordered graph: entry point is id 0 => expansions start hot
+    assert np.asarray(res.n_hot_hops).mean() > 0
+    assert np.asarray(res.n_free_pq).mean() > 0
+
+
+def test_pallas_path_equivalence(tiny_index):
+    idx = tiny_index
+    cfg = dataclasses.replace(idx.config.search, list_size=32, t_init=8)
+    plain = _run(idx, cfg)
+    pall = _run(idx, dataclasses.replace(cfg, use_pallas=True))
+    a = np.sort(np.asarray(plain.ids), 1)
+    b = np.sort(np.asarray(pall.ids), 1)
+    assert (a == b).mean() > 0.95

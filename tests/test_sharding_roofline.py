@@ -1,0 +1,80 @@
+"""Sharding rule resolution + HLO cost parser correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shard_lib
+from repro.launch.mesh import make_mesh
+from repro.roofline import hlo_parse
+from repro.roofline.analysis import collective_bytes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_logical_to_spec_divisibility():
+    # kv=1 (MQA) can't shard over model=16 -> replicated on that dim
+    big = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    spec = shard_lib.logical_to_spec(("embed", "kv"), shape=(64, 1), mesh=big)
+    assert spec == P("data", None)
+    spec = shard_lib.logical_to_spec(("embed", "kv"), shape=(64, 32), mesh=big)
+    assert spec == P("data", "model")
+    # dim not divisible by the data axis either -> fully replicated
+    spec = shard_lib.logical_to_spec(("embed", "kv"), shape=(33, 1), mesh=big)
+    assert spec == P(None, None)
+
+
+def test_param_shardings_tree(mesh):
+    specs = {"w": ("embed", "heads"), "b": ("embed",)}
+    shapes = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32),
+              "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    sh = shard_lib.param_shardings(specs, shapes, mesh)
+    assert sh["w"].spec == P("data", "model")
+    assert sh["b"].spec == P("data")
+
+
+def test_hlo_parser_scan_trip_counts():
+    def scanned(a):
+        def body(c, _):
+            return c @ a, None
+        c, _ = jax.lax.scan(body, a, None, length=10)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    text = jax.jit(scanned).lower(x).compile().as_text()
+    cost = hlo_parse.analyze_text(text)
+    expected = 10 * 2 * 128 ** 3
+    assert abs(cost.flops - expected) / expected < 0.01
+
+
+def test_hlo_parser_nested_scans():
+    def nested(a):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ a, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        c, _ = jax.lax.scan(outer, a, None, length=3)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    text = jax.jit(nested).lower(x).compile().as_text()
+    cost = hlo_parse.analyze_text(text)
+    expected = 15 * 2 * 64 ** 3
+    assert abs(cost.flops - expected) / expected < 0.01
+
+
+def test_collective_regex():
+    fake = """
+  %ag = f32[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = bf16[64]{0} all-reduce(%y), to_apply=%sum
+  %rs = f32[4,4]{1,0} reduce-scatter(%z), dimensions={0}
+"""
+    got = collective_bytes(fake)
+    assert got["all-gather"] == 8 * 128 * 4
+    assert got["all-reduce"] == 64 * 2
+    assert got["reduce-scatter"] == 16 * 4
