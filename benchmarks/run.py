@@ -22,6 +22,7 @@ MODULES = [
     "fig15_hotnodes",
     "fig16_queues",
     "fig17_biterror",
+    "streaming_bench",
     "kernels_bench",
     "roofline_bench",
 ]

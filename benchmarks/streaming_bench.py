@@ -1,0 +1,120 @@
+"""Streaming mutable-index benchmark — the workload class the static paper
+pipeline cannot serve.
+
+Measures, against the sift-like corpus:
+  * merged-search recall@10 (vs exact kNN of the *current* corpus) and QPS
+    as the delta segment grows to 5/10/20% of the base;
+  * mixed read/write throughput through the ServingEngine (interleaved
+    submit/insert/delete with periodic consolidation);
+  * the NAND update model: sustainable insert throughput, program/erase
+    energy, write amplification and endurance at several offered rates.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.core.dataset import exact_knn, recall_at_k
+from repro.nand.simulator import (
+    UpdateTrace, simulate_mixed, simulate_updates, trace_from_search_result,
+)
+from repro.serve.engine import ServingEngine
+from repro.stream import MutableIndex, search_merged
+
+
+def _perturbed(base: np.ndarray, n: int, rng) -> np.ndarray:
+    """New vectors from the corpus distribution (jittered resamples)."""
+    picks = base[rng.choice(base.shape[0], n)]
+    return (picks + 0.1 * rng.standard_normal(picks.shape)).astype(np.float32)
+
+
+def main(out=print) -> None:
+    idx = get_index("sift-like")
+    metric = idx.dataset.metric
+    queries = idx.dataset.queries
+    n_base = idx.dataset.num_base
+    rng = np.random.default_rng(11)
+
+    # ---- recall + QPS vs delta fraction (deletes fixed at 5%) --------------
+    mut = MutableIndex(idx)
+    deleted = rng.choice(n_base, int(0.05 * n_base), replace=False)
+    for e in deleted:
+        mut.delete(int(e))
+    grown = 0.0
+    base_res = None
+    for frac in (0.05, 0.10, 0.20):
+        need = int(frac * n_base) - int(grown * n_base)
+        for v in _perturbed(idx.dataset.base, need, rng):
+            mut.insert(v)
+        grown = frac
+        ext_ids, vecs = mut.live_vectors()
+        gt = ext_ids[exact_knn(queries, vecs, 10, metric)]
+        res = search_merged(mut, queries)          # warm/compile
+        t0 = time.time()
+        for _ in range(3):
+            res = search_merged(mut, queries)
+        dt = (time.time() - t0) / 3
+        rec = recall_at_k(res.ids, gt, 10)
+        qps = queries.shape[0] / dt
+        out(f"streaming/delta{int(frac*100)}pct,{dt/queries.shape[0]*1e6:.1f},"
+            f"recall={rec:.4f};qps={qps:.0f};live={mut.live_count()}")
+        base_res = res.base
+
+    # ---- consolidation restores the single-segment path --------------------
+    t0 = time.time()
+    mut.consolidate()
+    dt_cons = time.time() - t0
+    ext_ids, vecs = mut.live_vectors()
+    gt = ext_ids[exact_knn(queries, vecs, 10, metric)]
+    res = search_merged(mut, queries)
+    rec = recall_at_k(res.ids, gt, 10)
+    out(f"streaming/consolidated,{dt_cons*1e6:.0f},"
+        f"recall={rec:.4f};wa={mut.write_amplification():.2f}")
+
+    # ---- mixed read/write ops through the engine ---------------------------
+    eng = ServingEngine(MutableIndex(get_index("sift-like")), batch_size=16,
+                        flush_us=0.0)
+    new_vecs = _perturbed(idx.dataset.base, 400, rng)
+    t0 = time.time()
+    ops = 0
+    vi = 0
+    inserted: list[int] = []
+    for i in range(120):
+        for q in queries[rng.choice(queries.shape[0], 4)]:
+            eng.submit(q)
+        for _ in range(3):
+            inserted.append(eng.insert(new_vecs[vi % len(new_vecs)]))
+            vi += 1
+        if i % 8 == 7 and inserted:
+            eng.delete(inserted.pop(0))
+        ops += 7 + (1 if i % 8 == 7 else 0)
+        eng.step()
+    eng.drain()
+    dt = time.time() - t0
+    out(f"streaming/mixed-engine,{dt/ops*1e6:.1f},"
+        f"ops_per_s={ops/dt:.0f};batches={eng.stats['batches']};"
+        f"consolidations={eng.stats['consolidations']}")
+
+    # ---- NAND update model -------------------------------------------------
+    trace = trace_from_search_result(
+        base_res, dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+        index_bits=idx.gap.bit_width if idx.gap else 32, pq_bits=8 * idx.codes.shape[1],
+        metric=metric,
+    )
+    cap = simulate_updates(UpdateTrace(insert_rate=1.0)).update_throughput_per_s
+    out(f"streaming/nand-max-updates,0.0,inserts_per_s={cap:.0f}")
+    for rate in (1e3, 1e4, 1e5):
+        u = UpdateTrace(insert_rate=rate, delete_rate=0.2 * rate,
+                        dim=idx.dataset.dim, r_degree=idx.graph.max_degree)
+        m = simulate_mixed(trace, u)
+        out(f"streaming/mixed-sim-{rate:.0e},0.0,"
+            f"qps={m.qps:.0f};wa={m.update.write_amplification:.2f};"
+            f"e_prog_pj={m.update.program_energy_pj_per_insert:.0f};"
+            f"e_erase_pj={m.update.erase_energy_pj_per_insert:.0f};"
+            f"endurance_yr={m.update.endurance_years:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ from repro.configs.base import (  # noqa: F401  (re-exported)
     SearchConfig,
     ShapeConfig,
     SHAPES,
+    StreamConfig,
 )
 
 ARCH_IDS: List[str] = [

@@ -230,10 +230,27 @@ class DatasetConfig:
 
 
 @dataclass(frozen=True)
+class StreamConfig:
+    """Mutable-index (streaming) subsystem parameters.
+
+    The delta segment is an in-memory append-only Vamana graph over freshly
+    inserted vectors; once it exceeds ``consolidate_fraction`` of the base
+    corpus, ``MutableIndex.consolidate()`` merges it into a rebuilt base
+    index (re-running reorder / hot-node / gap-encode).
+    """
+    delta_capacity: int = 4096        # hard cap on delta-segment size
+    consolidate_fraction: float = 0.25  # consolidate when delta/base exceeds
+    delta_list_size: int = 32         # greedy-search list size inside delta
+    brute_force_below: int = 64       # exact scan while the delta is tiny
+    base_overfetch: int = 16          # extra base candidates (tombstone slack)
+
+
+@dataclass(frozen=True)
 class ProximaConfig:
     dataset: DatasetConfig = field(default_factory=DatasetConfig)
     pq: PQConfig = field(default_factory=PQConfig)
     graph: GraphConfig = field(default_factory=GraphConfig)
     search: SearchConfig = field(default_factory=SearchConfig)
+    stream: StreamConfig = field(default_factory=StreamConfig)
     hot_node_fraction: float = 0.03   # paper default 3%
     gap_encode: bool = True

@@ -41,6 +41,12 @@ class NandConfig:
     e_core_read_pj: float = 4442.0    # 3D NAND block read, dynamic
     e_core_htree_pj: float = 21.4
     e_tile_htree_pj: float = 198.6
+    # -- program/erase (SLC update path; reads stay the paper's fast path)
+    t_program_base_ns: float = 60_000.0   # ISPP pulse train, one WL (SLC)
+    t_erase_ns: float = 2_000_000.0       # block erase (~2 ms SLC)
+    e_program_pj: float = 45_000.0        # one page program (ISPP + verify)
+    e_erase_pj: float = 1_500_000.0       # one block erase
+    pe_cycle_limit: int = 100_000         # SLC endurance (P/E cycles)
     # -- capacity
     bits_per_cell: int = 1            # SLC (ECC-free, §V-E)
 
@@ -86,6 +92,36 @@ class NandConfig:
             self.e_core_read_pj
             + windows * (self.e_core_htree_pj + self.e_tile_htree_pj)
         )
+
+    # ------------------------------------------------------- program / erase
+    @property
+    def block_bytes(self) -> int:
+        """Erase granularity: one block's cells across all layers/SSLs."""
+        return self.n_bl * self.n_ssl * self.n_layers * self.bits_per_cell // 8
+
+    def program_latency_ns(self, bytes_written: int) -> float:
+        """Sequential page programs: each MUX-window page pays the full ISPP
+        pulse train (program latency is verify-dominated, not width-dominated)
+        plus the H-tree data load."""
+        pages = max(1, -(-bytes_written // self.page_bytes))
+        return pages * (
+            self.t_program_base_ns + self.page_bytes / self.bus_bytes_per_ns
+        )
+
+    def program_energy_pj(self, bytes_written: int) -> float:
+        pages = max(1, -(-bytes_written // self.page_bytes))
+        return pages * (
+            self.e_program_pj + self.e_core_htree_pj + self.e_tile_htree_pj
+        )
+
+    def erase_latency_ns(self, bytes_invalidated: int) -> float:
+        """Block erases needed to reclaim ``bytes_invalidated``."""
+        blocks = max(1, -(-bytes_invalidated // self.block_bytes))
+        return blocks * self.t_erase_ns
+
+    def erase_energy_pj(self, bytes_invalidated: int) -> float:
+        blocks = max(1, -(-bytes_invalidated // self.block_bytes))
+        return blocks * self.e_erase_pj
 
     # ---------------------------------------------------------- Fig 9 sweep
     def latency_density_tradeoff(self, page_sizes=(128, 512, 2048, 8192, 16384)):

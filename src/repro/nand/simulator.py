@@ -37,6 +37,52 @@ class WorkloadTrace:
     use_pq: bool = True
 
 
+def logical_insert_bytes(dim: int, pq_bits: int, r_degree: int,
+                         index_bits: int) -> float:
+    """Bytes one insert adds to the NAND-resident index: raw vector + PQ
+    code + one adjacency row. Shared by the analytic update model below and
+    the live delta segment's write accounting (stream.delta) so the two
+    cannot drift."""
+    return dim * 4 + pq_bits / 8.0 + r_degree * index_bits / 8.0
+
+
+@dataclasses.dataclass
+class UpdateTrace:
+    """Streaming-update workload: online inserts/deletes buffered in a DRAM
+    delta segment, folded into NAND by periodic consolidation (the
+    ``stream.MutableIndex`` serving model). NAND sees no per-insert program;
+    it sees the consolidation rewrite — that rewrite/logical ratio IS the
+    subsystem's write amplification."""
+    insert_rate: float = 0.0          # inserts per second offered
+    delete_rate: float = 0.0          # deletes per second offered
+    corpus_size: int = 1_000_000      # live vectors at steady state
+    consolidate_fraction: float = 0.25  # delta/base fraction triggering rebuild
+    dim: int = 128
+    r_degree: int = 64
+    index_bits: int = 32
+    pq_bits: int = 256
+
+    @property
+    def bytes_per_insert(self) -> float:
+        return logical_insert_bytes(self.dim, self.pq_bits, self.r_degree,
+                                    self.index_bits)
+
+
+@dataclasses.dataclass
+class UpdateSimResult:
+    update_throughput_per_s: float    # max sustainable inserts/sec
+    program_mb_per_s: float           # NAND program bandwidth at offered rate
+    write_amplification: float        # programmed / logical bytes
+    program_energy_pj_per_insert: float
+    erase_energy_pj_per_insert: float
+    update_power_w: float             # program+erase power at offered rate
+    program_busy_fraction: float      # share of core-time spent programming
+    endurance_years: float            # to SLC P/E limit at offered rate
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 @dataclasses.dataclass
 class SimResult:
     qps: float
@@ -97,16 +143,77 @@ def _engine_ns_per_query(t: WorkloadTrace, eng: EngineConfig) -> float:
     return ns
 
 
+def simulate_updates(
+    u: UpdateTrace,
+    nand: NandConfig = NandConfig(),
+) -> UpdateSimResult:
+    """Program/erase cost of the streaming-update path.
+
+    One consolidation cycle: ``consolidate_fraction * corpus_size`` inserts
+    accumulate in DRAM, then the rebuilt index — every live vector's raw
+    data + PQ code + adjacency row — is reprogrammed and the superseded
+    blocks erased. Deletes add no program traffic of their own but shrink
+    the live set the rewrite carries."""
+    frac = max(u.consolidate_fraction, 1e-6)
+    inserts_per_cycle = max(frac * u.corpus_size, 1.0)
+    pvb = u.bytes_per_insert
+    live_after = u.corpus_size * (1.0 + frac)
+    if u.insert_rate > 0:
+        live_after -= u.delete_rate / u.insert_rate * inserts_per_cycle
+    live_after = max(live_after, inserts_per_cycle)
+    rewrite_bytes = live_after * pvb
+    logical_bytes = inserts_per_cycle * pvb
+    wa = rewrite_bytes / logical_bytes
+
+    prog_ns_cycle = nand.program_latency_ns(int(rewrite_bytes))
+    erase_ns_cycle = nand.erase_latency_ns(int(rewrite_bytes))
+    core_ns_cycle = (prog_ns_cycle + erase_ns_cycle) / nand.n_cores
+    max_rate = inserts_per_cycle / (core_ns_cycle * 1e-9)
+
+    e_prog_cycle = nand.program_energy_pj(int(rewrite_bytes))
+    e_erase_cycle = nand.erase_energy_pj(int(rewrite_bytes))
+    e_prog_ins = e_prog_cycle / inserts_per_cycle
+    e_erase_ins = e_erase_cycle / inserts_per_cycle
+
+    rate = u.insert_rate
+    busy_frac = min(rate / max_rate, 1.0) if max_rate > 0 else 0.0
+    power_w = rate * (e_prog_ins + e_erase_ins) * 1e-12
+    prog_mb_s = rate * pvb * wa / 1e6
+
+    # endurance: bytes erased per second wear the whole array uniformly
+    # (consolidation is a sequential full rewrite -> perfect wear leveling)
+    cap_bytes = nand.capacity_bits / 8.0
+    bytes_per_s = rate * pvb * wa
+    if bytes_per_s > 0:
+        pe_per_s = bytes_per_s / cap_bytes
+        endurance_years = nand.pe_cycle_limit / pe_per_s / (365.25 * 86400)
+    else:
+        endurance_years = float("inf")
+    return UpdateSimResult(
+        update_throughput_per_s=max_rate,
+        program_mb_per_s=prog_mb_s,
+        write_amplification=wa,
+        program_energy_pj_per_insert=e_prog_ins,
+        erase_energy_pj_per_insert=e_erase_ins,
+        update_power_w=power_w,
+        program_busy_fraction=busy_frac,
+        endurance_years=endurance_years,
+    )
+
+
 def simulate(
     trace: WorkloadTrace,
     nand: NandConfig = NandConfig(),
     eng: EngineConfig = EngineConfig(),
     n_queues: int | None = None,
     iters: int = 40,
+    available_core_fraction: float = 1.0,
 ) -> SimResult:
     nq = n_queues if n_queues is not None else eng.n_queues
     t_core = nand.read_latency_ns()
     accesses, busy_ns_q, energy_pj_q, traffic = _accesses_per_query(trace, nand)
+    # update programs steal core-time from reads (mixed read/write serving)
+    busy_ns_q = busy_ns_q / max(available_core_fraction, 0.05)
     engine_ns = _engine_ns_per_query(trace, eng)
 
     cold_hops = max(trace.hops - trace.hot_hops, 0.0)
@@ -161,6 +268,45 @@ def simulate(
             "engine": engine_ns / total,
         },
         traffic_bytes_per_query=traffic,
+    )
+
+
+@dataclasses.dataclass
+class MixedSimResult:
+    """Read + update serving on the same cores."""
+    read: SimResult
+    update: UpdateSimResult
+    qps: float                        # read QPS under update contention
+    update_rate: float                # offered inserts/sec
+    total_power_w: float
+    qps_per_watt: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def simulate_mixed(
+    trace: WorkloadTrace,
+    updates: UpdateTrace,
+    nand: NandConfig = NandConfig(),
+    eng: EngineConfig = EngineConfig(),
+    n_queues: int | None = None,
+) -> MixedSimResult:
+    """Mixed read/write serving: the update stream's program/erase busy
+    fraction derates the cores available to reads."""
+    upd = simulate_updates(updates, nand)
+    read = simulate(
+        trace, nand, eng, n_queues=n_queues,
+        available_core_fraction=1.0 - min(upd.program_busy_fraction, 0.95),
+    )
+    power = read.power_w + upd.update_power_w
+    return MixedSimResult(
+        read=read,
+        update=upd,
+        qps=read.qps,
+        update_rate=updates.insert_rate,
+        total_power_w=power,
+        qps_per_watt=read.qps / max(power, 1e-9),
     )
 
 

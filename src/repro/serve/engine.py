@@ -5,13 +5,21 @@ Requests arrive individually; the scheduler packs them into fixed-size
 batches (the JAX search is compiled for a fixed query-batch shape = the
 ASIC's queue count) with a flush timeout, runs the compiled search, and
 completes futures. Single-threaded event-loop style, deterministic.
+
+The engine serves either a frozen ``ProximaIndex`` or a streaming
+``stream.MutableIndex``. In streaming mode ``insert``/``delete`` interleave
+with ``submit``: updates apply immediately (the delta segment is
+DRAM-resident), queued queries observe every update applied before their
+batch flushes, and consolidation runs *between* batches once the delta
+exceeds its configured fraction — never inside one, so the compiled base
+search shape is stable within a batch.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Union
 
 import jax
 import numpy as np
@@ -19,6 +27,8 @@ import numpy as np
 from repro.configs.base import SearchConfig
 from repro.core import search
 from repro.core.index import ProximaIndex
+from repro.stream.mutable import MutableIndex
+from repro.stream.searcher import search_merged
 
 
 @dataclasses.dataclass
@@ -38,28 +48,49 @@ class Request:
 class ServingEngine:
     def __init__(
         self,
-        index: ProximaIndex,
+        index: Union[ProximaIndex, MutableIndex],
         batch_size: int = 32,
         cfg: Optional[SearchConfig] = None,
         flush_us: float = 2000.0,
+        auto_consolidate: bool = True,
     ):
-        self.index = index
-        self.corpus = index.corpus()
-        self.cfg = cfg or index.config.search
-        self.metric = index.dataset.metric
+        self.mutable = index if isinstance(index, MutableIndex) else None
+        self._index = index.base if self.mutable else index
+        self.cfg = cfg or self.index.config.search
+        self.metric = self.index.dataset.metric
         self.batch_size = batch_size
         self.flush_us = flush_us
+        self.auto_consolidate = auto_consolidate
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self._next = 0
         self._last_flush = time.time()
-        self.stats = {"batches": 0, "queries": 0, "pad_fraction": 0.0}
+        self.stats = {
+            "batches": 0, "queries": 0, "pad_fraction": 0.0,
+            "inserts": 0, "deletes": 0, "consolidations": 0,
+        }
+        self.corpus = None if self.mutable else self._index.corpus()
         # warm the compile with a dummy batch
-        dummy = np.zeros((batch_size, index.dataset.dim), np.float32)
-        jax.block_until_ready(
-            search(self.corpus, dummy, self.cfg, self.metric).ids
-        )
+        dummy = np.zeros((batch_size, self.index.dataset.dim), np.float32)
+        self._search_batch(dummy)
 
+    @property
+    def index(self) -> ProximaIndex:
+        """Current base index — always the mutable's latest after any
+        consolidation (including capacity-forced ones inside insert)."""
+        return self.mutable.base if self.mutable is not None else self._index
+
+    # ------------------------------------------------------------- search path
+    def _search_batch(self, q: np.ndarray):
+        """(B, D) -> (ids, dists) through the merged or static path."""
+        if self.mutable is not None:
+            res = search_merged(self.mutable, q, self.cfg)
+            return res.ids, res.dists
+        res = search(self.corpus, q, self.cfg, self.metric)
+        jax.block_until_ready(res.ids)
+        return np.asarray(res.ids), np.asarray(res.dists)
+
+    # --------------------------------------------------------------- requests
     def submit(self, query: np.ndarray) -> int:
         rid = self._next
         self._next += 1
@@ -67,6 +98,31 @@ class ServingEngine:
                                   t_submit=time.time()))
         return rid
 
+    def insert(self, vector: np.ndarray) -> int:
+        """Streaming insert; returns the stable external id. Visible to every
+        query flushed after this call."""
+        if self.mutable is None:
+            raise RuntimeError("engine serves a frozen index — wrap it in "
+                               "stream.MutableIndex for online updates")
+        before = self.mutable.stats["consolidations"]
+        ext = self.mutable.insert(vector)   # may consolidate on a full delta
+        self.stats["consolidations"] += (
+            self.mutable.stats["consolidations"] - before
+        )
+        self.stats["inserts"] += 1
+        return ext
+
+    def delete(self, ext_id: int) -> bool:
+        """Streaming delete (tombstone). Filtered from every later flush."""
+        if self.mutable is None:
+            raise RuntimeError("engine serves a frozen index — wrap it in "
+                               "stream.MutableIndex for online updates")
+        ok = self.mutable.delete(ext_id)
+        if ok:
+            self.stats["deletes"] += 1
+        return ok
+
+    # ------------------------------------------------------------- scheduling
     def _flush_due(self) -> bool:
         if len(self.queue) >= self.batch_size:
             return True
@@ -76,7 +132,8 @@ class ServingEngine:
         )
 
     def step(self, force: bool = False) -> List[Request]:
-        """Run one batch if due; returns completed requests."""
+        """Run one batch if due; returns completed requests. In streaming
+        mode, consolidation triggers between batches."""
         if not (force and self.queue) and not self._flush_due():
             return []
         batch = [self.queue.popleft()
@@ -87,9 +144,7 @@ class ServingEngine:
             q = np.concatenate(
                 [q, np.zeros((self.batch_size - n, q.shape[1]), np.float32)]
             )
-        res = search(self.corpus, q, self.cfg, self.metric)
-        ids = np.asarray(res.ids)
-        dists = np.asarray(res.dists)
+        ids, dists = self._search_batch(q)
         now = time.time()
         for i, r in enumerate(batch):
             r.ids, r.dists, r.t_done = ids[i], dists[i], now
@@ -98,7 +153,20 @@ class ServingEngine:
         self.stats["queries"] += n
         self.stats["pad_fraction"] += (self.batch_size - n) / self.batch_size
         self._last_flush = now
+        if (
+            self.auto_consolidate
+            and self.mutable is not None
+            and self.mutable.needs_consolidation()
+        ):
+            self.consolidate()
         return batch
+
+    def consolidate(self) -> None:
+        """Fold the delta segment into a rebuilt base index."""
+        if self.mutable is None:
+            return
+        self.mutable.consolidate()
+        self.stats["consolidations"] += 1
 
     def drain(self) -> List[Request]:
         out = []

@@ -1,5 +1,5 @@
 """Embedding-corpus retrieval backed by Proxima — the integration point
-between the model zoo and the paper's technique (DESIGN.md §4).
+between the model zoo and the paper's technique.
 
 Any architecture's encoder output can feed the index; ``EmbeddingRetriever``
 takes an embedding function (e.g. a VLM backbone over patch embeddings, or

@@ -1,0 +1,18 @@
+"""Streaming mutable-index subsystem: online insert/delete over a frozen
+Proxima base index.
+
+  * ``delta``    — append-only in-memory segment with an incrementally
+                   maintained Vamana-style graph (greedy search + robust
+                   prune per insert, reverse-edge patching).
+  * ``mutable``  — MutableIndex: base index + delta segment + tombstones,
+                   with ``consolidate()`` merging the delta into a rebuilt
+                   base (re-running reorder / hot-node / gap-encode).
+  * ``searcher`` — merged search: compiled fixed-shape base search + small
+                   delta search, top-k fused by accurate distance with
+                   tombstone filtering.
+"""
+from repro.stream.delta import DeltaSegment
+from repro.stream.mutable import MutableIndex
+from repro.stream.searcher import MergedResult, search_merged
+
+__all__ = ["DeltaSegment", "MutableIndex", "MergedResult", "search_merged"]

@@ -1,0 +1,197 @@
+"""MutableIndex: tombstoned deletes + delta inserts over a frozen base.
+
+External ids are stable across the index's lifetime: the initial base corpus
+owns ids ``0..N-1`` (in the base index's reordered space) and every insert
+allocates the next id. Deletes mark ids in a tombstone set that the merged
+search filters at rerank time; the vectors are physically dropped at the
+next ``consolidate()``, which rebuilds the base ``ProximaIndex`` from all
+live vectors (re-running PQ, graph build, visit-frequency reordering,
+hot-node selection and gap encoding) and empties the delta segment.
+
+Write accounting mirrors what the 3D NAND backend would see: each insert
+eventually programs its raw vector + PQ code + adjacency row, and each
+consolidation reprograms the whole rebuilt index — the ratio is the
+subsystem's write amplification (fed to ``nand.simulator``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ProximaConfig, StreamConfig
+from repro.core.dataset import Dataset, exact_knn
+from repro.core.index import ProximaIndex, build_index
+from repro.stream.delta import DeltaSegment
+
+
+class MutableIndex:
+    def __init__(self, index: ProximaIndex, stream_cfg: Optional[StreamConfig] = None):
+        self.base = index
+        self.stream_cfg = stream_cfg or index.config.stream
+        n = index.dataset.num_base
+        self.ext_base = np.arange(n, dtype=np.int64)   # base internal -> ext
+        self.next_ext = n
+        self.delta_ext: list[int] = []                 # delta local -> ext
+        self._live_base: set[int] = set(range(n))      # O(1) liveness checks
+        self._delta_set: set[int] = set()
+        self.tombstones: set[int] = set()
+        self._dead_cache: Optional[np.ndarray] = None  # sorted tombstone array
+        self._corpus = None
+        self._delta = self._new_delta()
+        self.stats = {
+            "inserts": 0, "deletes": 0, "consolidations": 0,
+            "logical_bytes": 0.0, "consolidation_bytes": 0.0,
+        }
+
+    def _new_delta(self) -> DeltaSegment:
+        return DeltaSegment(
+            dim=self.base.dataset.dim,
+            metric=self.base.dataset.metric,
+            centroids=self.base.codebook.centroids,
+            graph_cfg=self.base.config.graph,
+            stream_cfg=self.stream_cfg,
+        )
+
+    # ------------------------------------------------------------ properties
+    @property
+    def delta(self) -> DeltaSegment:
+        return self._delta
+
+    @property
+    def metric(self) -> str:
+        return self.base.dataset.metric
+
+    def corpus(self):
+        """Cached device-side base corpus (refreshed on consolidation)."""
+        if self._corpus is None:
+            self._corpus = self.base.corpus()
+        return self._corpus
+
+    def delta_fraction(self) -> float:
+        return len(self._delta) / max(self.base.dataset.num_base, 1)
+
+    def needs_consolidation(self) -> bool:
+        return (
+            self._delta.full
+            or self.delta_fraction() >= self.stream_cfg.consolidate_fraction
+        )
+
+    def live_count(self) -> int:
+        return (
+            self.base.dataset.num_base + len(self.delta_ext)
+            - len(self.tombstones)
+        )
+
+    def is_live(self, ext_id: int) -> bool:
+        if ext_id in self.tombstones:
+            return False
+        return ext_id in self._live_base or ext_id in self._delta_set
+
+    def tombstone_mask(self, ext_ids: np.ndarray) -> np.ndarray:
+        """True where ext_ids are tombstoned. The dead-id array is cached
+        across calls (search_merged calls this per query in a batch)."""
+        if not self.tombstones:
+            return np.zeros(ext_ids.shape, bool)
+        if self._dead_cache is None:
+            self._dead_cache = np.fromiter(
+                self.tombstones, dtype=np.int64, count=len(self.tombstones)
+            )
+        return np.isin(ext_ids, self._dead_cache)
+
+    def live_vectors(self) -> tuple[np.ndarray, np.ndarray]:
+        """(ext_ids, raw vectors) of the *current* corpus — the ground-truth
+        population for streaming recall measurements."""
+        dead_base = self.tombstone_mask(self.ext_base)
+        ids = [self.ext_base[~dead_base]]
+        vecs = [self.base.dataset.base[~dead_base]]
+        if self.delta_ext:
+            dext = np.asarray(self.delta_ext, np.int64)
+            alive = ~self.tombstone_mask(dext)
+            ids.append(dext[alive])
+            vecs.append(self._delta.vecs[: len(self._delta)][alive])
+        return np.concatenate(ids), np.concatenate(vecs).astype(np.float32)
+
+    # -------------------------------------------------------------- mutation
+    def insert(self, vec: np.ndarray) -> int:
+        if self._delta.full:
+            self.consolidate()
+        self._delta.insert(vec)
+        ext = self.next_ext
+        self.next_ext += 1
+        self.delta_ext.append(ext)
+        self._delta_set.add(ext)
+        self.stats["inserts"] += 1
+        self.stats["logical_bytes"] += self._delta.logical_bytes_per_insert()
+        return ext
+
+    def delete(self, ext_id: int) -> bool:
+        """Tombstone an external id; False if already dead or never existed."""
+        if not self.is_live(ext_id):
+            return False
+        self.tombstones.add(int(ext_id))
+        self._dead_cache = None
+        self.stats["deletes"] += 1
+        return True
+
+    def consolidate(self, reorder_samples: int = 64) -> ProximaIndex:
+        """Merge delta + base into a rebuilt single-segment index."""
+        ext_ids, vecs = self.live_vectors()
+        cfg = self.base.config
+        new_n = int(vecs.shape[0])
+        ds_cfg = dataclasses.replace(
+            cfg.dataset, num_base=new_n, num_queries=1,
+        )
+        # keep the kNN build neighbourhood proportional to corpus density:
+        # when the corpus grows past the build list size, every kNN list
+        # turns purely local and the graph loses its natural long-range
+        # (inter-cluster) edges — greedy search then cannot navigate out of
+        # the entry point's neighbourhood and recall collapses
+        graph_cfg = cfg.graph
+        old_n = cfg.dataset.num_base
+        if new_n > old_n:
+            scaled = int(np.ceil(cfg.graph.build_list_size * new_n / old_n))
+            graph_cfg = dataclasses.replace(cfg.graph, build_list_size=scaled)
+        new_cfg = dataclasses.replace(cfg, dataset=ds_cfg, graph=graph_cfg)
+        queries = vecs[:1]
+        ds = Dataset(
+            base=vecs,
+            queries=queries,
+            gt=exact_knn(queries, vecs, min(10, vecs.shape[0]), self.metric),
+            metric=self.metric,
+            config=ds_cfg,
+        )
+        new_index = build_index(new_cfg, dataset=ds,
+                                reorder_samples=reorder_samples)
+        if new_index.reordering is not None:
+            self.ext_base = ext_ids[new_index.reordering.inv]
+        else:
+            self.ext_base = ext_ids
+        self.base = new_index
+        self._corpus = None
+        self._delta = self._new_delta()
+        self.delta_ext = []
+        self._live_base = set(int(e) for e in self.ext_base)
+        self._delta_set = set()
+        self.tombstones = set()
+        self._dead_cache = None
+        self.stats["consolidations"] += 1
+        self.stats["consolidation_bytes"] += float(
+            new_index.index_bytes()["total_bytes"]
+        )
+        return new_index
+
+    # ------------------------------------------------------------ accounting
+    def write_amplification(self) -> float:
+        """NAND bytes programmed / logical bytes inserted (>= 1)."""
+        logical = self.stats["logical_bytes"]
+        if logical <= 0:
+            return 1.0
+        return (logical + self.stats["consolidation_bytes"]) / logical
+
+    # ---------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, cfg=None):
+        from repro.stream.searcher import search_merged
+
+        return search_merged(self, queries, cfg)

@@ -1,0 +1,75 @@
+"""Merged search over base index + delta segment with tombstone filtering.
+
+The compiled fixed-shape JAX base search runs untouched (same shapes it was
+jitted for); the base is merely over-fetched by ``StreamConfig.base_overfetch``
+candidates so tombstoned hits can be dropped without losing recall. The delta
+segment is searched host-side (it is DRAM-resident and small by construction),
+and the two candidate streams are fused per query by *accurate* distance —
+both paths score with the same metric, so the merge is a plain top-k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.configs.base import SearchConfig
+from repro.core.search import SearchResult, search
+
+
+class MergedResult(NamedTuple):
+    ids: np.ndarray             # (Q, k) external ids, -1 padded
+    dists: np.ndarray           # (Q, k) accurate distances, +inf padded
+    base: SearchResult          # raw base-segment result (NAND trace input)
+    delta_candidates: np.ndarray  # (Q,) delta candidates considered
+
+
+def search_merged(
+    mutable,
+    queries: np.ndarray,
+    cfg: Optional[SearchConfig] = None,
+) -> MergedResult:
+    cfg = cfg or mutable.base.config.search
+    k = cfg.k
+    k_base = min(cfg.list_size, k + mutable.stream_cfg.base_overfetch)
+    base_cfg = dataclasses.replace(cfg, k=k_base) if k_base != k else cfg
+
+    q = np.atleast_2d(np.asarray(queries, np.float32))
+    res = search(mutable.corpus(), q, base_cfg, mutable.metric)
+    base_ids = np.asarray(res.ids)                    # (Q, k_base) internal
+    base_d = np.asarray(res.dists)
+
+    valid = (base_ids >= 0) & np.isfinite(base_d)
+    ext = mutable.ext_base[np.clip(base_ids, 0, None)]  # (Q, k_base)
+    dead = mutable.tombstone_mask(ext)
+    keep = valid & ~dead
+    base_d = np.where(keep, base_d, np.inf)
+    ext = np.where(keep, ext, -1)
+
+    nq = q.shape[0]
+    out_ids = np.full((nq, k), -1, np.int64)
+    out_d = np.full((nq, k), np.inf, np.float32)
+    n_delta = np.zeros((nq,), np.int32)
+    delta = mutable.delta
+    delta_ext = np.asarray(mutable.delta_ext, np.int64)
+    for i in range(nq):
+        cand_ids, cand_d = ext[i], base_d[i]
+        if len(delta):
+            # same tombstone slack as the base path: deleted delta vectors
+            # must not crowd live ones out of the candidate set
+            dl_ids, dl_d = delta.search(
+                q[i], k + mutable.stream_cfg.base_overfetch
+            )
+            n_delta[i] = len(dl_ids)
+            if len(dl_ids):
+                dl_ext = delta_ext[dl_ids]
+                alive = ~mutable.tombstone_mask(dl_ext)
+                cand_ids = np.concatenate([cand_ids, dl_ext[alive]])
+                cand_d = np.concatenate([cand_d, dl_d[alive]])
+        order = np.argsort(cand_d, kind="stable")[:k]
+        got = min(k, int(np.isfinite(cand_d[order]).sum()))
+        out_ids[i, :got] = cand_ids[order][:got]
+        out_d[i, :got] = cand_d[order][:got]
+    return MergedResult(ids=out_ids, dists=out_d, base=res,
+                        delta_candidates=n_delta)

@@ -1,0 +1,85 @@
+"""Degrade-gracefully shim for ``hypothesis``.
+
+Containers without hypothesis installed previously failed test *collection*
+for every property-based module. Importing ``given``/``settings``/``st``
+from here instead keeps the real library when present and otherwise
+substitutes a fixed-seed example runner: each ``@given`` test is executed
+``max_examples`` times with values drawn from a deterministic RNG, so the
+property still gets a spread of inputs (just not shrinking or coverage
+guidance).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mirrors `strategies as st` import style
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None, unique=False):
+            cap = max_size if max_size is not None else min_size + 10
+
+            def draw(rng):
+                n = int(rng.integers(min_size, cap + 1))
+                if not unique:
+                    return [elements.draw(rng) for _ in range(n)]
+                out = list(dict.fromkeys(
+                    elements.draw(rng) for _ in range(4 * n + 8)
+                ))[:n]
+                while len(out) < min_size:  # pathological tiny domains
+                    v = elements.draw(rng)
+                    if v not in out:
+                        out.append(v)
+                return out
+
+            return _Strategy(draw)
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(wrapper._max_examples):
+                    fn(*args, *(s.draw(rng) for s in strats), **kwargs)
+
+            # pytest must NOT see the property args as fixtures: drop the
+            # __wrapped__ link so inspect.signature reports (*args, **kwargs)
+            del wrapper.__wrapped__
+            wrapper._max_examples = 10
+            wrapper.hypothesis_shim = True
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+
+        return deco

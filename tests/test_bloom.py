@@ -1,7 +1,7 @@
 """Bloom filter: no false negatives (property), FPR near analytic bound."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bloom
 

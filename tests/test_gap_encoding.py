@@ -1,6 +1,6 @@
 """Gap-encoding round-trip (hypothesis property) + compression accounting."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gap_encoding import gap_decode, gap_encode, gap_stats
 

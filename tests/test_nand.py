@@ -5,7 +5,9 @@ import pytest
 
 from repro.nand.device import NandConfig
 from repro.nand.engine import EngineConfig
-from repro.nand.simulator import WorkloadTrace, simulate
+from repro.nand.simulator import (
+    UpdateTrace, WorkloadTrace, simulate, simulate_mixed, simulate_updates,
+)
 
 
 @pytest.fixture(scope="module")
@@ -78,3 +80,61 @@ def test_access_bound_breakdown(trace):
     cold = dataclasses.replace(trace, hot_hops=0.0, free_pq=0.0)
     r = simulate(cold)
     assert r.breakdown["nand_access"] > 0.6       # paper Fig 15: ~80%
+
+
+# ---------------------------------------------------------------------------
+# Program/erase model + streaming updates
+# ---------------------------------------------------------------------------
+
+def test_program_erase_dwarf_reads(nand):
+    """NAND asymmetry: a page program is orders of magnitude slower than the
+    Proxima core's sub-300ns read; a block erase slower still."""
+    read = nand.read_latency_ns()
+    prog = nand.program_latency_ns(nand.page_bytes)
+    erase = nand.erase_latency_ns(1)
+    assert prog > 50 * read
+    assert erase > 10 * prog
+    assert nand.program_energy_pj(nand.page_bytes) > nand.access_energy_pj(
+        nand.page_bytes
+    )
+
+
+def test_write_amplification_vs_consolidation_fraction():
+    """Delta-buffered updates: WA ~ (1+f)/f — consolidating more often
+    (smaller delta fraction) costs more rewrites per logical byte."""
+    was = []
+    for f in (0.1, 0.25, 0.5):
+        u = UpdateTrace(insert_rate=1e4, consolidate_fraction=f)
+        r = simulate_updates(u)
+        assert r.write_amplification >= 1.0
+        assert abs(r.write_amplification - (1.0 + f) / f) < 0.05
+        was.append(r.write_amplification)
+    assert was[0] > was[1] > was[2]
+
+
+def test_update_throughput_and_endurance():
+    u = UpdateTrace(insert_rate=1e4, delete_rate=2e3)
+    r = simulate_updates(u)
+    assert r.update_throughput_per_s > 1e4        # sustains the offered rate
+    assert 0.0 < r.program_busy_fraction < 1.0
+    assert r.program_energy_pj_per_insert > 0
+    assert r.erase_energy_pj_per_insert > 0
+    assert r.endurance_years > 1.0                # SLC at 10k inserts/s
+    # 10x the write rate -> ~10x less lifetime
+    r10 = simulate_updates(dataclasses.replace(u, insert_rate=1e5,
+                                               delete_rate=2e4))
+    assert r10.endurance_years < r.endurance_years / 5
+
+
+def test_mixed_trace_degrades_reads(trace):
+    """Program/erase traffic steals core time from the read path."""
+    prev_qps = float("inf")
+    for rate in (1e3, 3e4, 1e5):
+        u = UpdateTrace(insert_rate=rate, delete_rate=0.2 * rate)
+        m = simulate_mixed(trace, u)
+        assert m.qps < prev_qps
+        prev_qps = m.qps
+        assert m.update.write_amplification > 1.0
+        assert m.total_power_w > m.read.power_w
+    base = simulate(trace)
+    assert prev_qps < base.qps

@@ -35,6 +35,49 @@ def test_engine_batching_counters(tiny_index):
     assert eng.stats["pad_fraction"] == 0.0
 
 
+def test_engine_fifo_ordering(tiny_index):
+    """Requests complete in submission order, batch by batch, and the
+    latency accounting is monotone (t_submit <= t_done, nondecreasing
+    t_done across batches)."""
+    eng = ServingEngine(tiny_index, batch_size=4, flush_us=0.0)
+    q = tiny_index.dataset.queries[:10]
+    rids = [eng.submit(qq) for qq in q]
+    completed = []
+    while eng.queue:
+        completed.extend(r.rid for r in eng.step(force=True))
+    assert completed == rids                      # strict FIFO
+    dones = [eng.done[r].t_done for r in rids]
+    assert all(b >= a for a, b in zip(dones, dones[1:]))
+    for r in rids:
+        req = eng.done[r]
+        assert req.t_done >= req.t_submit
+        assert req.latency_ms >= 0.0
+
+
+def test_engine_flush_timeout(tiny_index):
+    """A sub-batch queue flushes only after flush_us elapses."""
+    import time as _time
+
+    eng = ServingEngine(tiny_index, batch_size=8, flush_us=5e4)  # 50 ms
+    eng._last_flush = _time.time()
+    eng.submit(tiny_index.dataset.queries[0])
+    assert eng.step() == []                       # timeout not reached
+    assert len(eng.queue) == 1
+    _time.sleep(0.06)
+    out = eng.step()                              # now due
+    assert [r.rid for r in out] == [0]
+    assert not eng.queue
+    assert eng.done[0].latency_ms >= 50.0         # waited for the timeout
+
+
+def test_engine_step_noop_without_requests(tiny_index):
+    eng = ServingEngine(tiny_index, batch_size=4, flush_us=0.0)
+    assert eng.step() == []
+    assert eng.step(force=True) == []
+    assert eng.drain() == []
+    assert eng.stats["batches"] == 0
+
+
 def test_embedding_retriever_self_query():
     rng = np.random.default_rng(0)
     embs = rng.standard_normal((400, 64)).astype(np.float32)

@@ -18,7 +18,7 @@ def mesh():
 
 def test_logical_to_spec_divisibility():
     # kv=1 (MQA) can't shard over model=16 -> replicated on that dim
-    big = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    big = shard_lib.abstract_mesh((16, 16), ("data", "model"))
     spec = shard_lib.logical_to_spec(("embed", "kv"), shape=(64, 1), mesh=big)
     assert spec == P("data", None)
     spec = shard_lib.logical_to_spec(("embed", "kv"), shape=(64, 32), mesh=big)

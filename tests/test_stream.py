@@ -1,0 +1,263 @@
+"""Streaming mutable-index subsystem: delta graph quality, tombstone
+filtering, the end-to-end insert/delete/consolidate acceptance flow, and
+the streaming ServingEngine path."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    DatasetConfig, GraphConfig, PQConfig, ProximaConfig, SearchConfig,
+    StreamConfig,
+)
+from repro.core import build_index, exact_knn, recall_at_k, search
+from repro.core.dataset import pairwise_dist
+from repro.serve.engine import ServingEngine
+from repro.stream import DeltaSegment, MutableIndex, search_merged
+
+
+@pytest.fixture(scope="module")
+def stream_cfg():
+    return ProximaConfig(
+        dataset=DatasetConfig(name="sift-like", num_base=900, num_queries=24,
+                              dim=32, num_clusters=10, cluster_std=0.25,
+                              seed=3),
+        pq=PQConfig(num_subvectors=8, num_centroids=64, kmeans_iters=6),
+        graph=GraphConfig(max_degree=16, build_list_size=32, alpha=1.2),
+        search=SearchConfig(k=10, list_size=64, t_init=16, t_step=8,
+                            repetition_rate=3, beta=1.06),
+        stream=StreamConfig(delta_capacity=512, consolidate_fraction=0.6,
+                            delta_list_size=32, brute_force_below=32,
+                            base_overfetch=16),
+        hot_node_fraction=0.03,
+    )
+
+
+@pytest.fixture(scope="module")
+def stream_index(stream_cfg):
+    return build_index(stream_cfg, reorder_samples=16)
+
+
+def _perturbed(base, n, rng, scale=0.1):
+    picks = base[rng.choice(base.shape[0], n)]
+    return (picks + scale * rng.standard_normal(picks.shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Delta segment
+# ---------------------------------------------------------------------------
+
+def test_delta_graph_search_quality():
+    """Incremental Vamana over the delta alone stays near-exact."""
+    rng = np.random.default_rng(0)
+    vecs = rng.standard_normal((150, 16)).astype(np.float32)
+    delta = DeltaSegment(
+        dim=16, metric="l2", centroids=rng.standard_normal((4, 16, 4)).astype(np.float32),
+        graph_cfg=GraphConfig(max_degree=12, build_list_size=24),
+        stream_cfg=StreamConfig(delta_capacity=256, delta_list_size=32,
+                                brute_force_below=8),
+    )
+    for v in vecs:
+        delta.insert(v)
+    hits = 0
+    queries = vecs[:20] + 0.01 * rng.standard_normal((20, 16)).astype(np.float32)
+    gt = exact_knn(queries, vecs, 5, "l2")
+    for q, g in zip(queries, gt):
+        ids, dists = delta.search(q, 5)
+        assert (np.diff(dists) >= 0).all()
+        hits += len(set(ids.tolist()) & set(g.tolist()))
+    assert hits / (20 * 5) > 0.9
+
+
+def test_delta_degrees_capped():
+    rng = np.random.default_rng(1)
+    delta = DeltaSegment(
+        dim=8, metric="l2", centroids=rng.standard_normal((2, 8, 4)).astype(np.float32),
+        graph_cfg=GraphConfig(max_degree=6, build_list_size=16),
+        stream_cfg=StreamConfig(delta_capacity=128, delta_list_size=16,
+                                brute_force_below=4),
+    )
+    for v in rng.standard_normal((100, 8)).astype(np.float32):
+        delta.insert(v)
+    assert (delta.degrees[:100] <= 6).all()
+    assert (delta.degrees[1:100] >= 1).all()  # every later insert got edges
+
+
+def test_delta_full_raises():
+    rng = np.random.default_rng(2)
+    delta = DeltaSegment(
+        dim=8, metric="l2", centroids=rng.standard_normal((2, 8, 4)).astype(np.float32),
+        graph_cfg=GraphConfig(max_degree=4, build_list_size=8),
+        stream_cfg=StreamConfig(delta_capacity=4),
+    )
+    for v in rng.standard_normal((4, 8)).astype(np.float32):
+        delta.insert(v)
+    with pytest.raises(RuntimeError):
+        delta.insert(np.zeros(8, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# MutableIndex: end-to-end acceptance flow
+# ---------------------------------------------------------------------------
+
+def test_streaming_end_to_end(stream_index):
+    """Insert >= 20%, delete >= 5%; merged recall@10 against exact kNN of the
+    CURRENT corpus stays within 0.05 of a from-scratch rebuild, and
+    consolidate() restores single-segment search with equal results."""
+    idx = stream_index
+    n = idx.dataset.num_base
+    mut = MutableIndex(idx)
+    rng = np.random.default_rng(7)
+    for v in _perturbed(idx.dataset.base, int(0.22 * n), rng):
+        mut.insert(v)
+    dead = rng.choice(n, int(0.06 * n), replace=False)
+    for e in dead:
+        assert mut.delete(int(e))
+    assert mut.live_count() == n + int(0.22 * n) - int(0.06 * n)
+
+    queries = idx.dataset.queries
+    ext_ids, vecs = mut.live_vectors()
+    gt = ext_ids[exact_knn(queries, vecs, 10, idx.dataset.metric)]
+    merged = search_merged(mut, queries)
+    rec_merged = recall_at_k(merged.ids, gt, 10)
+    assert not np.isin(merged.ids, dead).any()
+
+    # from-scratch rebuild == what consolidate() produces
+    mut.consolidate(reorder_samples=16)
+    assert len(mut.delta) == 0 and not mut.tombstones
+    rebuilt = search_merged(mut, queries)
+    rec_rebuilt = recall_at_k(rebuilt.ids, gt, 10)
+    assert rec_merged >= rec_rebuilt - 0.05, (rec_merged, rec_rebuilt)
+    assert rec_merged > 0.7
+
+    # single-segment equality: merged path == direct base search via ext ids
+    cfg = dataclasses.replace(idx.config.search,
+                              k=min(idx.config.search.list_size,
+                                    10 + mut.stream_cfg.base_overfetch))
+    direct = search(mut.base.corpus(), queries, cfg, idx.dataset.metric)
+    direct_ext = mut.ext_base[np.clip(np.asarray(direct.ids), 0, None)]
+    np.testing.assert_array_equal(rebuilt.ids, direct_ext[:, :10])
+
+
+def test_inserted_vector_is_findable(stream_index):
+    mut = MutableIndex(stream_index)
+    q = stream_index.dataset.queries[0]
+    ext = mut.insert(q)                     # exact duplicate of the query
+    res = search_merged(mut, q[None])
+    assert res.ids[0, 0] == ext
+    assert res.dists[0, 0] <= res.dists[0, 1] + 1e-6
+
+
+def test_deleted_neighbor_is_filtered(stream_index):
+    idx = stream_index
+    mut = MutableIndex(idx)
+    q = idx.dataset.queries[:8]
+    before = search_merged(mut, q)
+    victim = int(before.ids[0, 0])
+    assert mut.delete(victim)
+    assert not mut.delete(victim)           # double delete is a no-op
+    after = search_merged(mut, q)
+    assert victim not in after.ids[0].tolist()
+    # remaining results are still sorted + live
+    assert (np.diff(after.dists[0][np.isfinite(after.dists[0])]) >= -1e-6).all()
+
+
+def test_deleted_delta_vectors_dont_crowd_out_live_ones(stream_index):
+    """Tombstoned delta vectors must not eat the delta candidate budget:
+    a live (slightly farther) delta vector still reaches the merged top-k."""
+    mut = MutableIndex(stream_index)
+    q = stream_index.dataset.queries[0]
+    rng = np.random.default_rng(21)
+    dead = [mut.insert(q + 1e-4 * rng.standard_normal(q.shape).astype(np.float32))
+            for _ in range(10)]
+    live = mut.insert(q + 1e-2 * rng.standard_normal(q.shape).astype(np.float32))
+    for e in dead:
+        mut.delete(e)
+    res = search_merged(mut, q[None])
+    assert live in res.ids[0].tolist()
+    assert not np.isin(res.ids[0], dead).any()
+
+
+def test_capacity_overflow_consolidates(stream_index):
+    mut = MutableIndex(
+        stream_index,
+        stream_cfg=StreamConfig(delta_capacity=8, consolidate_fraction=0.9,
+                                brute_force_below=4, base_overfetch=8),
+    )
+    rng = np.random.default_rng(9)
+    for v in _perturbed(stream_index.dataset.base, 9, rng):
+        mut.insert(v)                       # 9th insert must consolidate
+    assert mut.stats["consolidations"] == 1
+    assert len(mut.delta) == 1
+
+
+def test_write_accounting(stream_index):
+    mut = MutableIndex(stream_index)
+    rng = np.random.default_rng(5)
+    for v in _perturbed(stream_index.dataset.base, 20, rng):
+        mut.insert(v)
+    assert mut.write_amplification() == 1.0   # nothing consolidated yet
+    mut.consolidate(reorder_samples=8)
+    wa = mut.write_amplification()
+    assert wa > 1.0
+    assert mut.stats["inserts"] == 20 and mut.stats["consolidations"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Streaming ServingEngine
+# ---------------------------------------------------------------------------
+
+def test_engine_streaming_updates_visible(stream_index):
+    eng = ServingEngine(MutableIndex(stream_index), batch_size=4, flush_us=0.0)
+    q = stream_index.dataset.queries[0]
+    ext = eng.insert(q)
+    rid = eng.submit(q)
+    eng.drain()
+    assert eng.done[rid].ids[0] == ext
+    assert eng.delete(ext)
+    rid2 = eng.submit(q)
+    eng.drain()
+    assert ext not in eng.done[rid2].ids.tolist()
+    assert eng.stats["inserts"] == 1 and eng.stats["deletes"] == 1
+
+
+def test_engine_consolidates_between_batches(stream_index):
+    mut = MutableIndex(
+        stream_index,
+        stream_cfg=StreamConfig(delta_capacity=256, consolidate_fraction=0.02,
+                                brute_force_below=32, base_overfetch=16),
+    )
+    eng = ServingEngine(mut, batch_size=2, flush_us=0.0)
+    rng = np.random.default_rng(13)
+    for v in _perturbed(stream_index.dataset.base, 20, rng):
+        eng.insert(v)
+    eng.submit(stream_index.dataset.queries[0])
+    eng.submit(stream_index.dataset.queries[1])
+    eng.drain()
+    assert eng.stats["consolidations"] >= 1
+    assert len(mut.delta) == 0
+
+
+def test_engine_tracks_capacity_forced_consolidation(stream_index):
+    """A full delta forces consolidation inside insert(); the engine's index
+    view and consolidation count must follow."""
+    mut = MutableIndex(
+        stream_index,
+        stream_cfg=StreamConfig(delta_capacity=8, consolidate_fraction=0.99,
+                                brute_force_below=4, base_overfetch=8),
+    )
+    eng = ServingEngine(mut, batch_size=2, flush_us=0.0,
+                        auto_consolidate=False)
+    rng = np.random.default_rng(17)
+    for v in _perturbed(stream_index.dataset.base, 9, rng):
+        eng.insert(v)
+    assert eng.stats["consolidations"] == 1
+    assert eng.index is mut.base              # no stale pre-rebuild view
+
+
+def test_frozen_engine_rejects_updates(tiny_index):
+    eng = ServingEngine(tiny_index, batch_size=2, flush_us=0.0)
+    with pytest.raises(RuntimeError):
+        eng.insert(np.zeros(tiny_index.dataset.dim, np.float32))
+    with pytest.raises(RuntimeError):
+        eng.delete(0)
