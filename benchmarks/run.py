@@ -23,6 +23,7 @@ MODULES = [
     "fig16_queues",
     "fig17_biterror",
     "streaming_bench",
+    "sharded_bench",
     "kernels_bench",
     "roofline_bench",
 ]

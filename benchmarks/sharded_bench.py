@@ -1,0 +1,112 @@
+"""Sharded serving sweep — num_tiles x allocation policy x routing.
+
+Three serving regimes over the same partitioned corpus:
+
+  * **fan-out** — every query probes every tile. Recall jumps well above
+    the single-tile graph's ceiling (each tile is searched near-
+    exhaustively) at the cost of total work: the acceptance bar is 4-tile
+    recall within 1% of single-tile, which fan-out clears with margin.
+  * **routed** (cluster policy) — the coarse router sends each query to its
+    ``probe_tiles`` nearest tiles only; unprobed channels skip it. This is
+    what makes throughput SCALE with the channel count.
+  * **routed + scaled frontier** — per-tile ``list_size = L/P``: the
+    aggregate candidate budget of the single-tile search, split across
+    channels; the max-QPS corner of the trade-off.
+
+Every row reports the channel-parallel NAND model (``simulate_sharded``):
+aggregate QPS, scaling vs the single-tile baseline, per-channel core
+utilization, straggler load imbalance, and the partition's hot-node
+replication overhead.
+
+``--smoke`` shrinks the sweep to cluster x P=4 for CI.
+
+    PYTHONPATH=src python -m benchmarks.sharded_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses as dc
+
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.core import recall_at_k, search
+from repro.core.dataset import exact_knn
+from repro.nand.simulator import (
+    simulate,
+    simulate_sharded,
+    trace_from_search_result,
+    traces_from_sharded_result,
+)
+from repro.shard import partition_index, sharded_search
+
+
+def main(out=print, smoke: bool = False) -> None:
+    idx = get_index("sift-like")
+    cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                       repetition_rate=3, beta=1.06)
+    q = idx.dataset.queries
+    metric = idx.dataset.metric
+    gt = idx.dataset.gt
+    if gt.shape[1] < 10:
+        gt = exact_knn(q, idx.dataset.base, 10, metric)
+    trace_kw = dict(
+        dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+        index_bits=idx.gap.bit_width if idx.gap else 32,
+        pq_bits=idx.codebook.num_subvectors * 8, metric=metric,
+    )
+
+    # --- single-tile baseline ------------------------------------------------
+    res1 = search(idx.corpus(), q, cfg, metric)
+    rec1 = recall_at_k(np.asarray(res1.ids), gt, 10)
+    sim1 = simulate(trace_from_search_result(res1, **trace_kw))
+    out(f"sharded/baseline/P1,{sim1.latency_us:.1f},"
+        f"recall={rec1:.4f};qps={sim1.qps:.0f};util={sim1.core_utilization:.2f}")
+
+    def row(label, part, res):
+        rec = recall_at_k(np.asarray(res.ids), gt, 10)
+        sim = simulate_sharded(traces_from_sharded_result(res, **trace_kw))
+        utils = ";".join(f"{u:.2f}" for u in sim.channel_utilization)
+        out(f"sharded/{label},{sim.latency_us:.1f},"
+            f"recall={rec:.4f};d_recall={rec - rec1:+.4f};"
+            f"qps={sim.qps:.0f};scaling={sim.qps / sim1.qps:.2f}x;"
+            f"ch_util={utils};imbalance={sim.load_imbalance:.2f};"
+            f"hot_replica_overhead="
+            f"{part.replicated_fraction(idx.dataset.num_base):.3f}")
+        return rec
+
+    policies = ("cluster",) if smoke else ("contiguous", "hash", "cluster")
+    tile_counts = (4,) if smoke else (2, 4, 8)
+    for policy in policies:
+        for p in tile_counts:
+            tiled, part = partition_index(idx, p, policy)
+            res = sharded_search(tiled, q, cfg, metric)
+            rec = row(f"{policy}/P{p}/fanout", part, res)
+            if p == 4 and rec < rec1 - 0.01:
+                out(f"sharded/{policy}/P4/RECALL_PARITY_FAIL,0.0,"
+                    f"recall {rec:.4f} vs single-tile {rec1:.4f}")
+            if policy != "cluster":
+                continue
+            # the router only makes sense with geometry-aware allocation
+            for nprobe in (1, 2):
+                if nprobe >= p:
+                    continue
+                res = sharded_search(tiled, q, cfg, metric,
+                                     probe_tiles=nprobe)
+                row(f"{policy}/P{p}/probe{nprobe}", part, res)
+            # max-throughput corner: single-tile candidate budget split
+            # across channels + single-tile routing
+            tcfg = dc.replace(cfg,
+                              list_size=max(2 * cfg.k, cfg.list_size // p))
+            res = sharded_search(tiled, q, tcfg, metric, probe_tiles=1)
+            row(f"{policy}/P{p}/probe1_L{tcfg.list_size}", part, res)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="cluster x 4 tiles only (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

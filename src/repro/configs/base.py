@@ -246,11 +246,48 @@ class StreamConfig:
 
 
 @dataclass(frozen=True)
+class ShardConfig:
+    """Multi-channel corpus partitioning (the shard layer, ``repro.shard``).
+
+    ``num_tiles`` search tiles model independent NAND channel groups: cold
+    vertices are partitioned by ``policy`` (contiguous | hash | cluster),
+    hot nodes and PQ centroids are replicated on every tile
+    (``replicate_hot``), and a query fans out to all tiles before a
+    cross-tile top-k merge.
+    """
+    num_tiles: int = 1                # 1 -> single-tile (paper baseline)
+    policy: str = "contiguous"        # contiguous | hash | cluster
+    replicate_hot: bool = True        # paper's hot-node repetition per channel
+    probe_tiles: int = 0              # 0 -> full fan-out; >0 -> route each
+                                      # query to its nearest tiles (cluster
+                                      # policy's IVF-style nprobe)
+
+
+@dataclass(frozen=True)
 class ProximaConfig:
     dataset: DatasetConfig = field(default_factory=DatasetConfig)
     pq: PQConfig = field(default_factory=PQConfig)
     graph: GraphConfig = field(default_factory=GraphConfig)
     search: SearchConfig = field(default_factory=SearchConfig)
     stream: StreamConfig = field(default_factory=StreamConfig)
+    shard: ShardConfig = field(default_factory=ShardConfig)
     hot_node_fraction: float = 0.03   # paper default 3%
     gap_encode: bool = True
+
+
+def upgrade_config(cfg: ProximaConfig) -> ProximaConfig:
+    """Fill in fields added to ``ProximaConfig`` after ``cfg`` was pickled
+    (benchmark index caches survive schema growth: a missing field gets its
+    current default). Returns ``cfg`` unchanged when already complete."""
+    missing = [
+        f for f in dataclasses.fields(ProximaConfig)
+        if not hasattr(cfg, f.name)
+    ]
+    if not missing:
+        return cfg
+    kwargs = {
+        f.name: getattr(cfg, f.name)
+        for f in dataclasses.fields(ProximaConfig)
+        if hasattr(cfg, f.name)
+    }
+    return ProximaConfig(**kwargs)

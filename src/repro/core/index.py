@@ -27,7 +27,7 @@ from repro.core.reorder import (
     reorder_graph,
     trace_visit_frequency,
 )
-from repro.core.search import Corpus
+from repro.core.search import Corpus, l2_normalize
 
 
 @dataclass
@@ -59,8 +59,29 @@ class ProximaIndex:
     def _search_base(self) -> np.ndarray:
         b = self.dataset.base
         if self.dataset.metric == "angular":
-            b = b / np.maximum(np.linalg.norm(b, axis=-1, keepdims=True), 1e-12)
+            b = l2_normalize(b, np)
         return b
+
+    def sharded_corpus(self, num_tiles: Optional[int] = None,
+                       policy: Optional[str] = None,
+                       replicate_hot: Optional[bool] = None):
+        """Partition this index into P search tiles (one per NAND channel
+        group) for the channel-parallel serving path; see ``repro.shard``.
+        Defaults come from ``config.shard``. Returns (TiledCorpus,
+        TilePartition)."""
+        from repro.configs.base import ShardConfig
+        from repro.shard import partition_index
+
+        # getattr: configs unpickled from pre-shard-layer caches lack .shard
+        sc = getattr(self.config, "shard", None) or ShardConfig()
+        return partition_index(
+            self,
+            num_tiles=sc.num_tiles if num_tiles is None else num_tiles,
+            policy=sc.policy if policy is None else policy,
+            replicate_hot=(
+                sc.replicate_hot if replicate_hot is None else replicate_hot
+            ),
+        )
 
     def index_bytes(self) -> dict:
         """Storage accounting (paper Challenge 3 / §III-E)."""

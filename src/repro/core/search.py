@@ -71,8 +71,23 @@ class _State(NamedTuple):
     rounds: jnp.ndarray
 
 
-def _exact_dist(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
-    """q (D,), x (K, D) -> (K,). Angular assumes pre-normalized inputs."""
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1) — bitonic networks and compiled
+    batch buckets all pad to this."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def l2_normalize(x, xp=jnp):
+    """Unit-normalize rows — THE angular-metric normalization, shared by the
+    JAX search, the reference oracle and the index's device-corpus export
+    (``xp`` selects numpy for host-side callers)."""
+    return x / xp.maximum(xp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def _exact_dist(q, x, metric: str):
+    """q (D,), x (K, D) -> (K,). Angular assumes pre-normalized inputs.
+    Operator-only arithmetic: works identically on jnp (traced search) and
+    np (reference oracle) inputs — the single exact-distance path."""
     if metric == "l2":
         diff = x - q[None, :]
         return (diff * diff).sum(-1)
@@ -122,7 +137,7 @@ def _merge_sort_topl_bitonic(ids, dists, acc, evaluated, n_ids, n_dists):
     all_acc = jnp.concatenate([acc, jnp.full(n_ids.shape, INF)])
     all_ev = jnp.concatenate([evaluated, jnp.zeros(n_ids.shape, bool)])
     total = all_d.shape[0]
-    pot = 1 << (total - 1).bit_length()
+    pot = next_pow2(total)
     keys = jnp.pad(all_d, (0, pot - total), constant_values=jnp.inf)
     pos = jnp.pad(jnp.arange(total, dtype=jnp.int32), (0, pot - total),
                   constant_values=0)
@@ -147,9 +162,7 @@ def search(
 ) -> SearchResult:
     """Batched Proxima search. queries: (Q, D)."""
     if metric == "angular":
-        queries = queries / jnp.maximum(
-            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
-        )
+        queries = l2_normalize(queries)
 
     L, k = cfg.list_size, cfg.k
     R = corpus.adjacency.shape[1]
@@ -325,10 +338,15 @@ def search_reference(
     visited set (no Bloom false positives). Returns (ids, dists, counters).
     If ``trace`` is given, expansion counts are accumulated into it
     (visit-frequency histogram for graph reordering, §IV-E)."""
-    from repro.core.dataset import pairwise_dist
-
     if metric == "angular":
-        query = query / max(float(np.linalg.norm(query)), 1e-12)
+        # same single normalization point as the JAX path (idempotent if the
+        # caller already normalized, as build_index's tracing does); base
+        # rows are normalized per fetched slice, never the whole corpus
+        query = l2_normalize(query, np)
+
+    def _rows(ids):
+        rows = base[ids]
+        return l2_normalize(rows, np) if metric == "angular" else rows
 
     m = centroids.shape[0]
     if cfg.use_pq:
@@ -338,10 +356,10 @@ def search_reference(
             return adt[np.arange(m)[None, :], codes[ids].astype(np.int64)].sum(-1)
     else:
         def tdist(ids):
-            return pairwise_dist(query[None], base[ids], metric)[0]
+            return _exact_dist(query, _rows(ids), metric)
 
     def adist(ids):
-        return pairwise_dist(query[None], base[ids], metric)[0]
+        return _exact_dist(query, _rows(ids), metric)
 
     L, k = cfg.list_size, cfg.k
     counters = {"hops": 0, "pq": 0, "acc": 0, "hot": 0, "free": 0, "rounds": 0}

@@ -312,10 +312,19 @@ def simulate_mixed(
 
 def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
                              metric="l2", use_pq=True, use_hot=True) -> WorkloadTrace:
-    """Average the per-query counters of a core.search SearchResult."""
+    """Average the per-query counters of a core.search SearchResult.
+
+    A ``shard.ShardedSearchResult`` is accepted too: its (P, Q) counters are
+    summed across the tile axis first, so the trace carries the TOTAL work a
+    query costs across all channels (use ``traces_from_sharded_result`` +
+    ``simulate_sharded`` for the per-channel view)."""
     import numpy as np
 
-    f = lambda x: float(np.asarray(x).mean())
+    if hasattr(res, "per_tile"):
+        res = res.per_tile
+        f = lambda x: float(np.asarray(x).sum(0).mean())
+    else:
+        f = lambda x: float(np.asarray(x).mean())
     return WorkloadTrace(
         hops=f(res.n_hops), pq=f(res.n_pq), acc=f(res.n_acc),
         hot_hops=f(res.n_hot_hops) if use_hot else 0.0,
@@ -323,4 +332,119 @@ def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
         rounds=f(res.rounds), dim=dim, r_degree=r_degree,
         index_bits=index_bits, pq_bits=pq_bits, raw_bytes=dim * 4,
         metric=metric, use_pq=use_pq,
+    )
+
+
+def traces_from_sharded_result(res, *, dim, r_degree, index_bits, pq_bits,
+                               metric="l2", use_pq=True,
+                               use_hot=True) -> list[WorkloadTrace]:
+    """Per-tile workload traces from a ``shard.ShardedSearchResult`` — the
+    per-tile counter axis maps 1:1 onto NAND channel groups."""
+    per = res.per_tile if hasattr(res, "per_tile") else res
+    num_tiles = per.ids.shape[0]
+    return [
+        trace_from_search_result(
+            type(per)(*(f[p] for f in per)),
+            dim=dim, r_degree=r_degree, index_bits=index_bits,
+            pq_bits=pq_bits, metric=metric, use_pq=use_pq, use_hot=use_hot,
+        )
+        for p in range(num_tiles)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Channel-parallel (sharded) serving model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedSimResult:
+    """Multi-channel serving: P tiles, each on its own slice of the NAND
+    cores, every query fanned out to all channels and merged by the shared
+    bitonic sorter."""
+    per_channel: list                     # SimResult per channel group
+    qps: float                            # aggregate (straggler-bound)
+    latency_us: float                     # max channel latency + merge pass
+    qps_per_watt: float
+    power_w: float
+    channel_utilization: list             # per-channel rho
+    load_imbalance: float                 # max/mean channel busy-time
+    merge_overhead_us: float              # cross-tile bitonic merge per query
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["per_channel"] = [r.to_dict() for r in self.per_channel]
+        return d
+
+
+def _with_cores(nand: NandConfig, cores: int) -> NandConfig:
+    """A NandConfig whose core count is one channel group's share."""
+    cores = max(int(cores), 1)
+    if cores % nand.cores_per_tile == 0:
+        return dataclasses.replace(nand, n_tiles=cores // nand.cores_per_tile)
+    return dataclasses.replace(nand, n_tiles=1, cores_per_tile=cores)
+
+
+def simulate_sharded(
+    traces: list,
+    nand: NandConfig = NandConfig(),
+    eng: EngineConfig = EngineConfig(),
+    n_queues: int | None = None,
+    available_core_fraction: float = 1.0,
+) -> ShardedSimResult:
+    """Serve one query stream over P corpus tiles on channel-partitioned
+    cores.
+
+    Each of the P tiles gets ``n_cores / P`` cores; a query runs on every
+    channel concurrently (per-tile traversal of a 1/P-size graph), so query
+    latency is the slowest channel's latency plus one cross-tile bitonic
+    merge pass, and the engine's N_q queues bound concurrency exactly as in
+    the single-tile model. Per-tile traces carry less work per query than
+    the single-tile trace (shorter traversals on smaller graphs), which is
+    where the channel-level bandwidth win comes from; imbalance across
+    channels (allocation-policy dependent) shows up as straggler latency.
+
+    With routed probing (``shard.sharded_search(probe_tiles=...)``) the
+    skipped lanes arrive zeroed, so each per-tile trace is the channel's
+    work amortized over ALL arriving queries — correct for throughput and
+    utilization; per-query latency of the probed subset is then slightly
+    underestimated (amortized chain length < probed chain length).
+    """
+    if not traces:
+        raise ValueError("need at least one per-tile trace")
+    p = len(traces)
+    nq = n_queues if n_queues is not None else eng.n_queues
+    ch_nand = _with_cores(nand, nand.n_cores // p)
+    per = [
+        simulate(t, ch_nand, eng, n_queues=nq,
+                 available_core_fraction=available_core_fraction)
+        for t in traces
+    ]
+    merge_us = eng.sorter_latency_ns() * 1e-3
+    lat_us = max(r.latency_us for r in per) + merge_us
+    qps = nq / (lat_us * 1e-6)
+
+    # power: every channel pays its NAND access energy at the aggregate
+    # query rate; the CMOS engine is shared and counted once
+    e_nand_pj = sum(_accesses_per_query(t, ch_nand)[2] for t in traces)
+    p_nand_w = qps * e_nand_pj * 1e-12
+    engine_ns = max(_engine_ns_per_query(t, eng) for t in traces)
+    busy_frac = min(qps * engine_ns * 1e-9 / nq, 1.0)
+    queue_scale = nq / 256.0
+    p_engine_w = (
+        eng.p_static_mw * queue_scale
+        + eng.p_dynamic_mw * busy_frac * queue_scale
+    ) * 1e-3
+    power = p_nand_w + p_engine_w
+
+    busy = [_accesses_per_query(t, ch_nand)[1] for t in traces]
+    imbalance = max(busy) / max(sum(busy) / p, 1e-9)
+    return ShardedSimResult(
+        per_channel=per,
+        qps=qps,
+        latency_us=lat_us,
+        qps_per_watt=qps / max(power, 1e-9),
+        power_w=power,
+        channel_utilization=[r.core_utilization for r in per],
+        load_imbalance=imbalance,
+        merge_overhead_us=merge_us,
     )

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import SearchConfig
 from repro.core import search
+from repro.core.search import next_pow2
 from repro.core.index import ProximaIndex
 from repro.stream.mutable import MutableIndex
 from repro.stream.searcher import search_merged
@@ -53,6 +54,9 @@ class ServingEngine:
         cfg: Optional[SearchConfig] = None,
         flush_us: float = 2000.0,
         auto_consolidate: bool = True,
+        num_tiles: Optional[int] = None,
+        shard_policy: Optional[str] = None,
+        probe_tiles: Optional[int] = None,
     ):
         self.mutable = index if isinstance(index, MutableIndex) else None
         self._index = index.base if self.mutable else index
@@ -69,10 +73,67 @@ class ServingEngine:
             "batches": 0, "queries": 0, "pad_fraction": 0.0,
             "inserts": 0, "deletes": 0, "consolidations": 0,
         }
-        self.corpus = None if self.mutable else self._index.corpus()
-        # warm the compile with a dummy batch
+        # ----- multi-channel (sharded) base path ---------------------------
+        # getattr: configs unpickled from pre-shard-layer caches lack .shard
+        from repro.configs.base import ShardConfig
+
+        shard_cfg = getattr(self.index.config, "shard", None) or ShardConfig()
+        self.probe_tiles = (
+            shard_cfg.probe_tiles if probe_tiles is None else probe_tiles
+        )
+        self.tiled = None
+        self.partition = None
+        if self.mutable is not None:
+            # defaults come from the MutableIndex itself (it may have been
+            # tiled manually via set_num_tiles); sync back only when the
+            # caller explicitly asked for a tiling, so an engine constructed
+            # with defaults never clobbers the index's serving mode
+            self.num_tiles = (
+                self.mutable.num_tiles if num_tiles is None else num_tiles
+            )
+            self.shard_policy = (
+                self.mutable.shard_policy if shard_policy is None
+                else shard_policy
+            )
+            if (self.num_tiles, self.shard_policy) != (
+                self.mutable.num_tiles, self.mutable.shard_policy
+            ):
+                self.mutable.set_num_tiles(self.num_tiles, self.shard_policy)
+            self.corpus = None
+        else:
+            self.num_tiles = (
+                shard_cfg.num_tiles if num_tiles is None else num_tiles
+            )
+            self.shard_policy = (
+                shard_cfg.policy if shard_policy is None else shard_policy
+            )
+            if self.num_tiles > 1:
+                self.tiled, self.partition = self._index.sharded_corpus(
+                    self.num_tiles, self.shard_policy
+                )
+                self.corpus = None
+            else:
+                self.corpus = self._index.corpus()
+        if self.probe_tiles and self.num_tiles > 1 and \
+                self.shard_policy != "cluster":
+            import warnings
+
+            warnings.warn(
+                "probe_tiles routing assumes geometry-aware tiles "
+                "(shard_policy='cluster'); with hash/contiguous allocation "
+                "tile centroids are near-identical and routed recall "
+                "collapses", stacklevel=2,
+            )
+        # warm the compile for the full-batch bucket (smaller power-of-two
+        # buckets compile lazily on first use)
         dummy = np.zeros((batch_size, self.index.dataset.dim), np.float32)
         self._search_batch(dummy)
+
+    def _bucket(self, n: int) -> int:
+        """Smallest power-of-two >= n, capped at batch_size — the fixed set
+        of compiled batch shapes (at most log2(batch_size)+1 executables, so
+        varying queue depths never trigger a fresh jit compile)."""
+        return min(next_pow2(max(n, 1)), self.batch_size)
 
     @property
     def index(self) -> ProximaIndex:
@@ -82,10 +143,21 @@ class ServingEngine:
 
     # ------------------------------------------------------------- search path
     def _search_batch(self, q: np.ndarray):
-        """(B, D) -> (ids, dists) through the merged or static path."""
+        """(B, D) -> (ids, dists) through the merged, sharded or static
+        path."""
         if self.mutable is not None:
-            res = search_merged(self.mutable, q, self.cfg)
+            res = search_merged(self.mutable, q, self.cfg,
+                                probe_tiles=self.probe_tiles or None)
             return res.ids, res.dists
+        if self.tiled is not None:
+            from repro.shard import sharded_search
+
+            res = sharded_search(
+                self.tiled, q, self.cfg, self.metric,
+                probe_tiles=self.probe_tiles or None,
+            )
+            jax.block_until_ready(res.ids)
+            return np.asarray(res.ids), np.asarray(res.dists)
         res = search(self.corpus, q, self.cfg, self.metric)
         jax.block_until_ready(res.ids)
         return np.asarray(res.ids), np.asarray(res.dists)
@@ -140,9 +212,10 @@ class ServingEngine:
                  for _ in range(min(self.batch_size, len(self.queue)))]
         n = len(batch)
         q = np.stack([r.query for r in batch])
-        if n < self.batch_size:  # pad to the compiled shape
+        bucket = self._bucket(n)
+        if n < bucket:  # pad to the bucket's compiled shape
             q = np.concatenate(
-                [q, np.zeros((self.batch_size - n, q.shape[1]), np.float32)]
+                [q, np.zeros((bucket - n, q.shape[1]), np.float32)]
             )
         ids, dists = self._search_batch(q)
         now = time.time()
@@ -151,7 +224,7 @@ class ServingEngine:
             self.done[r.rid] = r
         self.stats["batches"] += 1
         self.stats["queries"] += n
-        self.stats["pad_fraction"] += (self.batch_size - n) / self.batch_size
+        self.stats["pad_fraction"] += (bucket - n) / bucket
         self._last_flush = now
         if (
             self.auto_consolidate

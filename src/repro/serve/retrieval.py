@@ -33,6 +33,8 @@ class EmbeddingRetriever:
         m = pq_subvectors or max(
             mm for mm in (8, 16, 25, 32) if d % mm == 0
         )
+        # num_queries is a placeholder until the first query() — the true
+        # batch size is only known at call time and is patched in there
         cfg = ProximaConfig(
             dataset=DatasetConfig(name="corpus", num_base=n, num_queries=1,
                                   dim=d, metric=metric),
@@ -59,9 +61,17 @@ class EmbeddingRetriever:
         from repro.core import search
         import dataclasses as dc
 
+        qb = np.atleast_2d(np.asarray(q, np.float32))
+        # keep the dataset metadata truthful for batched queries: the config
+        # travels with NAND traces and checkpoint manifests, so it must
+        # reflect the batch actually searched, not a build-time placeholder
+        if self.index.config.dataset.num_queries != qb.shape[0]:
+            ds_cfg = dc.replace(self.index.config.dataset,
+                                num_queries=qb.shape[0])
+            self.index.config = dc.replace(self.index.config, dataset=ds_cfg)
+            self.index.dataset.config = ds_cfg
         cfg = dc.replace(self.index.config.search, k=k)
-        res = search(self.index.corpus(), np.atleast_2d(np.asarray(q, np.float32)),
-                     cfg, self.index.dataset.metric)
+        res = search(self.index.corpus(), qb, cfg, self.index.dataset.metric)
         ids = np.asarray(res.ids)
         # map back to pre-reorder corpus ids
         if self.index.reordering is not None:

@@ -1,0 +1,22 @@
+"""Multi-channel corpus sharding — the paper's data-allocation scheme
+(§IV-E/§V) as a serving-stack layer: the corpus is partitioned into P tiles
+(one per NAND channel group), each tile carries its own proximity graph and
+entry point, hot nodes and PQ centroids are replicated on every tile, and a
+query fans out to all tiles in parallel before a cross-tile top-k merge."""
+from repro.shard.partition import TiledCorpus, TilePartition, partition_index
+from repro.shard.search import (
+    ShardedSearchResult,
+    cross_tile_merge,
+    route_queries,
+    sharded_search,
+)
+
+__all__ = [
+    "TiledCorpus",
+    "TilePartition",
+    "partition_index",
+    "ShardedSearchResult",
+    "cross_tile_merge",
+    "route_queries",
+    "sharded_search",
+]

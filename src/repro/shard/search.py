@@ -1,0 +1,195 @@
+"""Per-tile search fan-out + cross-tile top-k merge.
+
+A query batch is broadcast to every tile; each tile runs the UNMODIFIED
+fixed-shape Algorithm-1 engine (``core.search.search``) against its local
+graph/codes/base — this is the channel-parallel dataflow: P independent
+while-loop searches over identical shapes, vmapped over the leading tile
+axis. Tile-local result ids are mapped to global ids through ``tile_ids``
+and the P*k candidate streams are fused per query by accurate distance —
+through the Pallas bitonic network when ``cfg.use_pallas`` (the ASIC's
+shared Bitonic Sorter doing one extra merge pass), else ``lax.top_k``.
+
+Replicated hot nodes surface from several tiles with bit-identical
+distances (same base row, same arithmetic); the merge masks those
+duplicates before ranking so they cannot crowd the top-k.
+
+Per-tile traversal counters are preserved with their tile axis in
+``ShardedSearchResult.per_tile`` — that is the per-channel workload the
+NAND simulator consumes (``nand.simulator.simulate_sharded``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SearchConfig
+from repro.core.search import Corpus, SearchResult, next_pow2, search
+from repro.shard.partition import TiledCorpus
+
+
+class ShardedSearchResult(NamedTuple):
+    ids: jnp.ndarray            # (Q, k) int32 GLOBAL ids, -1 padded
+    dists: jnp.ndarray          # (Q, k) f32 accurate distances, +inf padded
+    per_tile: SearchResult      # every field with a leading (P, ...) tile axis
+    probed: jnp.ndarray         # (P, Q) bool — which channels served which
+                                # query (all-True under full fan-out)
+
+    @property
+    def num_tiles(self) -> int:
+        return self.per_tile.ids.shape[0]
+
+
+def cross_tile_merge(
+    ids: jnp.ndarray,           # (Q, C) global candidate ids, -1 invalid
+    dists: jnp.ndarray,         # (Q, C) accurate distances
+    k: int,
+    use_pallas: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fuse per-tile candidate streams into a global top-k per query.
+
+    Duplicate ids (hot-node replicas found by several tiles) keep only their
+    first occurrence; invalid and duplicate slots rank as +inf and come back
+    as id -1.
+    """
+    q, c = ids.shape
+    eq = ids[:, :, None] == ids[:, None, :]
+    lower = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    dup = (eq & lower[None]).any(-1)
+    key = jnp.where(dup | (ids < 0), jnp.inf, dists)
+    if use_pallas:
+        from repro.kernels import ops
+
+        pot = next_pow2(c)
+        keys = jnp.pad(key, ((0, 0), (0, pot - c)), constant_values=jnp.inf)
+        pos = jnp.broadcast_to(
+            jnp.pad(jnp.arange(c, dtype=jnp.int32), (0, pot - c)), (q, pot)
+        )
+        sk, sp = ops.bitonic_sort_pairs(keys, pos)
+        out_d, perm = sk[:, :k], sp[:, :k]
+        out_ids = jnp.take_along_axis(ids, perm, 1)
+    else:
+        neg, idx = jax.lax.top_k(-key, k)
+        out_d = -neg
+        out_ids = jnp.take_along_axis(ids, idx, 1)
+    out_ids = jnp.where(jnp.isinf(out_d), -1, out_ids)
+    return out_ids, out_d
+
+
+def _fan_out(tiled: TiledCorpus, queries, cfg: SearchConfig, metric: str,
+             use_vmap: bool) -> SearchResult:
+    """Run ``search`` on every tile; results get a leading (P,) axis."""
+    corpus = Corpus(
+        adjacency=tiled.adjacency, codes=tiled.codes, base=tiled.base,
+        centroids=tiled.centroids, entry_point=tiled.entry_points,
+        hot_count=tiled.hot_counts,
+    )
+    if use_vmap:
+        axes = Corpus(adjacency=0, codes=0, base=0, centroids=None,
+                      entry_point=0, hot_count=0)
+        return jax.vmap(
+            lambda c, q: search(c, q, cfg, metric), in_axes=(axes, None)
+        )(corpus, queries)
+    # unrolled fan-out: identical shapes across tiles -> one compiled
+    # executable reused P times, and tiles early-terminate independently
+    # (the vmapped while_loop cannot; Pallas kernels also skip the extra
+    # batching axis this way)
+    per = [
+        search(
+            Corpus(
+                adjacency=tiled.adjacency[p], codes=tiled.codes[p],
+                base=tiled.base[p], centroids=tiled.centroids,
+                entry_point=tiled.entry_points[p],
+                hot_count=tiled.hot_counts[p],
+            ),
+            queries, cfg, metric,
+        )
+        for p in range(tiled.num_tiles)
+    ]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+
+
+def route_queries(tiled: TiledCorpus, queries: jnp.ndarray,
+                  probe_tiles: int, metric: str = "l2") -> jnp.ndarray:
+    """(P, Q) bool — the ``probe_tiles`` tiles whose cold-vertex centroid is
+    nearest each query. The coarse router in front of the channels (IVF-
+    style nprobe); only meaningful with geometry-aware allocation
+    (``policy="cluster"``), where a query's neighbours concentrate on few
+    tiles."""
+    if metric == "angular":
+        from repro.core.search import l2_normalize
+
+        queries = l2_normalize(queries)
+        cents = l2_normalize(tiled.tile_centroids)
+        d = -(queries @ cents.T)                       # (Q, P)
+    elif metric == "ip":
+        d = -(queries @ tiled.tile_centroids.T)
+    else:
+        diff = queries[:, None, :] - tiled.tile_centroids[None]
+        d = (diff * diff).sum(-1)
+    p = tiled.tile_centroids.shape[0]
+    nprobe = max(1, min(int(probe_tiles), p))
+    _, idx = jax.lax.top_k(-d, nprobe)                 # (Q, nprobe)
+    mask = jnp.zeros((queries.shape[0], p), bool)
+    mask = mask.at[jnp.arange(queries.shape[0])[:, None], idx].set(True)
+    return mask.T                                      # (P, Q)
+
+
+def sharded_search(
+    tiled: TiledCorpus,
+    queries,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    use_vmap: bool | None = None,
+    probe_tiles: int | None = None,
+) -> ShardedSearchResult:
+    """Channel-parallel Proxima search: fan out over tiles, merge top-k.
+
+    ``use_vmap`` selects the fan-out style; by default the Pallas kernel
+    path uses the unrolled loop (kernels stay at their compiled rank) and
+    the jnp path vmaps over the tile axis.
+
+    ``probe_tiles`` enables the coarse query router: each query is served
+    by only its nearest tiles, the rest of the channels skip it (their
+    candidates are masked from the merge and their counters are zeroed for
+    that query). Full fan-out (None or 0) trades total work for recall;
+    routed probing is what lets throughput scale with the channel count.
+    """
+    queries = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+    if use_vmap is None:
+        use_vmap = not cfg.use_pallas
+    per = _fan_out(tiled, queries, cfg, metric, use_vmap)
+    nt = tiled.num_tiles
+    # probe_tiles in {None, 0} -> full fan-out (0 is ShardConfig's default
+    # "routing off" value, so config values can be passed straight through)
+    if probe_tiles and probe_tiles < nt:
+        probed = route_queries(tiled, queries, probe_tiles, metric)
+        # a skipped (channel, query) lane did no work: zero its counters so
+        # the NAND traces bill only the probed channels
+        zeroed = {
+            f: jnp.where(probed, getattr(per, f), 0)
+            for f in ("n_hops", "n_pq", "n_acc", "n_hot_hops", "n_free_pq",
+                      "rounds")
+        }
+        per = per._replace(**zeroed)
+    else:
+        probed = jnp.ones((nt, queries.shape[0]), bool)
+
+    # tile-local -> global ids (pads and invalid lanes -> -1)
+    gids = jax.vmap(
+        lambda tid, ids: jnp.where(
+            ids >= 0, tid[jnp.clip(ids, 0, tid.shape[0] - 1)], jnp.int32(-1)
+        )
+    )(tiled.tile_ids, per.ids)                  # (P, Q, k)
+    gids = jnp.where(probed[:, :, None], gids, -1)
+
+    p, q, k = gids.shape
+    cand_ids = jnp.transpose(gids, (1, 0, 2)).reshape(q, p * k)
+    cand_d = jnp.transpose(per.dists, (1, 0, 2)).reshape(q, p * k)
+    cand_d = jnp.where(cand_ids >= 0, cand_d, jnp.inf)
+    out_ids, out_d = cross_tile_merge(cand_ids, cand_d, cfg.k,
+                                      use_pallas=cfg.use_pallas)
+    return ShardedSearchResult(ids=out_ids, dists=out_d, per_tile=per,
+                               probed=probed)

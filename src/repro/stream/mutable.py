@@ -20,7 +20,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.configs.base import ProximaConfig, StreamConfig
+from repro.configs.base import ProximaConfig, ShardConfig, StreamConfig
 from repro.core.dataset import Dataset, exact_knn
 from repro.core.index import ProximaIndex, build_index
 from repro.stream.delta import DeltaSegment
@@ -39,6 +39,13 @@ class MutableIndex:
         self.tombstones: set[int] = set()
         self._dead_cache: Optional[np.ndarray] = None  # sorted tombstone array
         self._corpus = None
+        # multi-channel base serving: the frozen base goes tiled, the delta
+        # segment stays global (it is DRAM-resident; see stream.searcher).
+        # getattr: configs unpickled from pre-shard-layer caches lack .shard
+        shard_cfg = getattr(index.config, "shard", None) or ShardConfig()
+        self.num_tiles = shard_cfg.num_tiles
+        self.shard_policy = shard_cfg.policy
+        self._tiled = None
         self._delta = self._new_delta()
         self.stats = {
             "inserts": 0, "deletes": 0, "consolidations": 0,
@@ -68,6 +75,23 @@ class MutableIndex:
         if self._corpus is None:
             self._corpus = self.base.corpus()
         return self._corpus
+
+    def set_num_tiles(self, num_tiles: int, policy: Optional[str] = None):
+        """Route the base segment through ``num_tiles`` search tiles from the
+        next flush on (the delta always stays global)."""
+        self.num_tiles = int(num_tiles)
+        if policy is not None:
+            self.shard_policy = policy
+        self._tiled = None
+
+    def tiled_corpus(self):
+        """Cached per-tile base corpus; repartitioned after consolidation
+        (the rebuilt base has a fresh id space and vertex set)."""
+        if self._tiled is None:
+            self._tiled, _ = self.base.sharded_corpus(
+                self.num_tiles, self.shard_policy
+            )
+        return self._tiled
 
     def delta_fraction(self) -> float:
         return len(self._delta) / max(self.base.dataset.num_base, 1)
@@ -138,7 +162,9 @@ class MutableIndex:
     def consolidate(self, reorder_samples: int = 64) -> ProximaIndex:
         """Merge delta + base into a rebuilt single-segment index."""
         ext_ids, vecs = self.live_vectors()
-        cfg = self.base.config
+        from repro.configs.base import upgrade_config
+
+        cfg = upgrade_config(self.base.config)
         new_n = int(vecs.shape[0])
         ds_cfg = dataclasses.replace(
             cfg.dataset, num_base=new_n, num_queries=1,
@@ -170,6 +196,7 @@ class MutableIndex:
             self.ext_base = ext_ids
         self.base = new_index
         self._corpus = None
+        self._tiled = None
         self._delta = self._new_delta()
         self.delta_ext = []
         self._live_base = set(int(e) for e in self.ext_base)

@@ -6,11 +6,17 @@ candidates so tombstoned hits can be dropped without losing recall. The delta
 segment is searched host-side (it is DRAM-resident and small by construction),
 and the two candidate streams are fused per query by *accurate* distance —
 both paths score with the same metric, so the merge is a plain top-k.
+
+When the mutable index is configured with ``num_tiles > 1`` the base segment
+runs channel-parallel (``shard.sharded_search`` over per-tile graphs, with
+its own cross-tile merge); the delta segment ALWAYS stays a single global
+structure — it models the DRAM-resident write buffer in front of the NAND
+channels, not NAND-resident data.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import numpy as np
 
@@ -21,7 +27,9 @@ from repro.core.search import SearchResult, search
 class MergedResult(NamedTuple):
     ids: np.ndarray             # (Q, k) external ids, -1 padded
     dists: np.ndarray           # (Q, k) accurate distances, +inf padded
-    base: SearchResult          # raw base-segment result (NAND trace input)
+    base: Union[SearchResult, object]  # raw base result; with a tiled base
+                                # this is shard.ShardedSearchResult (its
+                                # .per_tile counters feed the NAND model)
     delta_candidates: np.ndarray  # (Q,) delta candidates considered
 
 
@@ -29,6 +37,7 @@ def search_merged(
     mutable,
     queries: np.ndarray,
     cfg: Optional[SearchConfig] = None,
+    probe_tiles: Optional[int] = None,
 ) -> MergedResult:
     cfg = cfg or mutable.base.config.search
     k = cfg.k
@@ -36,7 +45,16 @@ def search_merged(
     base_cfg = dataclasses.replace(cfg, k=k_base) if k_base != k else cfg
 
     q = np.atleast_2d(np.asarray(queries, np.float32))
-    res = search(mutable.corpus(), q, base_cfg, mutable.metric)
+    if getattr(mutable, "num_tiles", 1) > 1:
+        from repro.shard import sharded_search
+
+        # tiled base: per-tile ids come back already mapped to the base
+        # index's global (reordered-internal) id space, so the external-id
+        # and tombstone plumbing below is identical to the single-tile path
+        res = sharded_search(mutable.tiled_corpus(), q, base_cfg,
+                             mutable.metric, probe_tiles=probe_tiles)
+    else:
+        res = search(mutable.corpus(), q, base_cfg, mutable.metric)
     base_ids = np.asarray(res.ids)                    # (Q, k_base) internal
     base_d = np.asarray(res.dists)
 

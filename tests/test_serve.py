@@ -78,6 +78,55 @@ def test_engine_step_noop_without_requests(tiny_index):
     assert eng.stats["batches"] == 0
 
 
+def test_engine_bucketed_batches_reuse_compiles(tiny_index):
+    """Varying queue depths hit a fixed set of power-of-two bucket shapes:
+    flushing many different sub-batch sizes may only add one compiled
+    executable per bucket, never one per batch size."""
+    if not hasattr(search, "_cache_size"):
+        pytest.skip("jax.jit cache introspection unavailable")
+    eng = ServingEngine(tiny_index, batch_size=8, flush_us=0.0)
+    before = search._cache_size()
+    q = tiny_index.dataset.queries
+    got = {}
+    for n in (1, 2, 3, 5, 6, 7, 3, 1, 5):   # buckets: 1, 2, 4, 8 only
+        rids = [eng.submit(qq) for qq in q[:n]]
+        eng.drain()
+        for i, r in enumerate(rids):
+            got[r] = eng.done[r].ids
+    new_compiles = search._cache_size() - before
+    assert new_compiles <= 4, f"{new_compiles} compiles for 9 batch sizes"
+    # padding lanes never leak into results
+    direct = np.asarray(
+        search(tiny_index.corpus(), q[:7], tiny_index.config.search,
+               tiny_index.dataset.metric).ids
+    )
+    rids = [eng.submit(qq) for qq in q[:7]]
+    eng.drain()
+    out = np.stack([eng.done[r].ids for r in rids])
+    assert (np.sort(out, 1) == np.sort(direct, 1)).all()
+
+
+def test_engine_sharded_path(tiny_index):
+    """num_tiles > 1 routes batches through the channel-parallel search and
+    serves results equivalent to the single-tile engine."""
+    eng = ServingEngine(tiny_index, batch_size=8, flush_us=0.0, num_tiles=2,
+                        shard_policy="hash")
+    assert eng.tiled is not None and eng.tiled.num_tiles == 2
+    q = tiny_index.dataset.queries[:8]
+    rids = [eng.submit(qq) for qq in q]
+    eng.drain()
+    got = np.stack([eng.done[r].ids for r in rids])
+    direct = np.asarray(
+        search(tiny_index.corpus(), q, tiny_index.config.search,
+               tiny_index.dataset.metric).ids
+    )
+    overlap = np.mean([
+        len(set(got[i].tolist()) & set(direct[i].tolist())) / direct.shape[1]
+        for i in range(len(q))
+    ])
+    assert overlap >= 0.7, f"sharded engine diverged: overlap {overlap}"
+
+
 def test_embedding_retriever_self_query():
     rng = np.random.default_rng(0)
     embs = rng.standard_normal((400, 64)).astype(np.float32)
@@ -87,3 +136,17 @@ def test_embedding_retriever_self_query():
         ids, _ = retr.query(embs[qi], k=5)
         hits += int(qi in ids[0].tolist())
     assert hits >= 3  # a corpus vector should find itself (ANN: allow 1 miss)
+
+
+def test_embedding_retriever_batched_metadata():
+    """query() metadata reflects the actual batch: num_queries derives from
+    the queries searched, not the build-time placeholder of 1."""
+    rng = np.random.default_rng(1)
+    embs = rng.standard_normal((300, 32)).astype(np.float32)
+    retr = EmbeddingRetriever(embs, metric="angular", max_degree=16)
+    ids, dists = retr.query(embs[:5], k=3)
+    assert ids.shape == (5, 3) and dists.shape == (5, 3)
+    assert retr.index.config.dataset.num_queries == 5
+    assert retr.index.dataset.config.num_queries == 5
+    retr.query(embs[0], k=3)
+    assert retr.index.config.dataset.num_queries == 1
