@@ -1,0 +1,82 @@
+"""Beam-parallel traversal sweep — E in {1, 2, 4, 8}.
+
+Proxima keeps every NAND channel/plane busy by issuing neighbour fetches
+wide, not one vertex at a time (§IV-D dataflow). ``SearchConfig.beam_width``
+generalizes the Algorithm-1 loop: each round pops the E best unevaluated
+candidates, gathers their E adjacency rows in one fetch and scores all E*R
+fresh neighbours in one batch, so the SERIAL pointer-chase shrinks ~E× at
+iso-recall while total work (hops, PQ lookups) grows only at the frontier's
+edge. The sweep reports, per E:
+
+  * mean traversal rounds + the rounds speedup vs E=1 (the tentpole claim:
+    >= 1.5x at E=4 with recall within 0.01),
+  * realized expansion parallelism (hops/rounds <= E),
+  * recall@10 delta vs the E=1 baseline,
+  * simulated NAND QPS / latency with the round-level parallelism billed to
+    ``NandConfig.n_planes`` parallel plane reads (``WorkloadTrace.beam_width``).
+
+``--smoke`` runs E in {1, 4} only (CI).
+
+    PYTHONPATH=src python -m benchmarks.beam_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses as dc
+
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.core import recall_at_k, search
+from repro.core.dataset import exact_knn
+from repro.nand.simulator import simulate, trace_from_search_result
+
+
+def main(out=print, smoke: bool = False) -> None:
+    idx = get_index("sift-like")
+    base_cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                            repetition_rate=3, beta=1.06)
+    q = idx.dataset.queries
+    metric = idx.dataset.metric
+    gt = idx.dataset.gt
+    if gt.shape[1] < 10:
+        gt = exact_knn(q, idx.dataset.base, 10, metric)
+    trace_kw = dict(
+        dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+        index_bits=idx.gap.bit_width if idx.gap else 32,
+        pq_bits=idx.codebook.num_subvectors * 8, metric=metric,
+    )
+
+    widths = (1, 4) if smoke else (1, 2, 4, 8)
+    rec1 = rounds1 = qps1 = None
+    for e in widths:
+        cfg = dc.replace(base_cfg, beam_width=e)
+        res = search(idx.corpus(), q, cfg, metric)
+        rec = recall_at_k(np.asarray(res.ids), gt, 10)
+        rounds = float(np.asarray(res.rounds).mean())
+        hops = float(np.asarray(res.n_hops).mean())
+        sim = simulate(trace_from_search_result(res, **trace_kw))
+        if rec1 is None:
+            rec1, rounds1, qps1 = rec, rounds, sim.qps
+        out(f"beam/E{e},{sim.latency_us:.1f},"
+            f"recall={rec:.4f};d_recall={rec - rec1:+.4f};"
+            f"rounds={rounds:.1f};round_speedup={rounds1 / rounds:.2f}x;"
+            f"hops={hops:.1f};realized_beam={hops / max(rounds, 1):.2f};"
+            f"qps={sim.qps:.0f};qps_scaling={sim.qps / qps1:.2f}x")
+        if e == 4:
+            if rounds1 / rounds < 1.5:
+                out(f"beam/E4/ROUND_SPEEDUP_FAIL,0.0,"
+                    f"{rounds1 / rounds:.2f}x < 1.5x")
+            if rec < rec1 - 0.01:
+                out(f"beam/E4/RECALL_PARITY_FAIL,0.0,"
+                    f"recall {rec:.4f} vs E=1 {rec1:.4f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="E in {1, 4} only (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

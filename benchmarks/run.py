@@ -24,6 +24,7 @@ MODULES = [
     "fig17_biterror",
     "streaming_bench",
     "sharded_bench",
+    "beam_bench",
     "kernels_bench",
     "roofline_bench",
 ]

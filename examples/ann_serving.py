@@ -45,4 +45,4 @@ rec = recall_at_k(ids, idx.dataset.gt, 10)
 print(f"QPS {len(done)/dt:.0f} | latency p50 {np.percentile(lats, 50):.1f}ms "
       f"p95 {np.percentile(lats, 95):.1f}ms p99 {np.percentile(lats, 99):.1f}ms")
 print(f"recall@10 {rec:.3f} | batches {eng.stats['batches']} "
-      f"(avg pad {eng.stats['pad_fraction']/max(eng.stats['batches'],1):.0%})")
+      f"(avg pad {eng.stats['pad_fraction']:.0%})")

@@ -210,6 +210,9 @@ class SearchConfig:
     repetition_rate: int = 2          # r — stable rounds before termination
     beta: float = 1.06                # PQ error ratio for reranking
     max_rounds: int = 256             # hard cap on traversal rounds
+    beam_width: int = 1               # E — candidates expanded per round; the
+                                      # E adjacency fetches of one round are
+                                      # plane-parallel NAND page reads
     use_pq: bool = True               # False -> HNSW-style accurate traversal
     early_termination: bool = True
     rerank: bool = True

@@ -142,6 +142,9 @@ def distributed_search(
     R = corpus.adjacency.shape[2]
     M = corpus.codes.shape[2]
     p = corpus.num_shards
+    # beam-parallel traversal (core.search semantics): E expansions per
+    # round — one (Qb, E*R) collective wave instead of E serial rounds
+    E = min(max(int(getattr(cfg, "beam_width", 1)), 1), L)
     use_pq = cfg.use_pq
     t_init = cfg.t_init if cfg.early_termination else L
     t_step = cfg.t_step if cfg.early_termination else L
@@ -252,19 +255,27 @@ def distributed_search(
             valid = s["ids"] >= 0
             unev = valid & ~s["evaluated"]
             has = unev.any(axis=1)
-            first = jnp.argmax(unev, axis=1)
-            v = jnp.where(has, jnp.take_along_axis(s["ids"], first[:, None], 1)[:, 0], 0)
+            # per-query beam: positions of the E best unevaluated entries
+            # (argmax fast path at E=1, like core.search)
+            if E == 1:
+                sel = jnp.argmax(unev, axis=1)[:, None]            # (Qb, 1)
+            else:
+                sel = jnp.argsort(~unev, axis=1, stable=True)[:, :E]
+            sel_valid = jnp.arange(E)[None, :] < unev.sum(axis=1)[:, None]
+            vs = jnp.where(
+                sel_valid, jnp.take_along_axis(s["ids"], sel, 1), 0
+            )                                                      # (Qb, E)
 
-            neigh = fetch_adjacency(v)                       # (Qb, R) collective
+            neigh = fetch_adjacency(vs.reshape(-1)).reshape(nq, E * R)
             fresh = jax.vmap(_dedup_round)(neigh)
             fresh &= ~jax.vmap(lambda b, n_: bloom.contains(b, n_, num_hashes))(s["bits"], neigh)
-            fresh &= has[:, None]
+            fresh &= jnp.repeat(sel_valid, R, axis=1)
             nd = jnp.where(fresh, score(neigh, adts, qb), INF)  # collective
             bits = jax.vmap(lambda b, n_, m_: bloom.insert(b, n_, m_, num_hashes))(
                 s["bits"], neigh, fresh
             )
-            evaluated = s["evaluated"].at[jnp.arange(nq), first].set(
-                jnp.take_along_axis(s["evaluated"], first[:, None], 1)[:, 0] | has
+            evaluated = s["evaluated"].at[jnp.arange(nq)[:, None], sel].set(
+                jnp.take_along_axis(s["evaluated"], sel, 1) | sel_valid
             )
             ids, dists, acc, evaluated = jax.vmap(_merge_sort_topl)(
                 s["ids"], s["dists"], s["acc"], evaluated,

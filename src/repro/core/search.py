@@ -2,10 +2,14 @@
 program (vmapped over the query batch = the ASIC's N_q search queues).
 
 Per traversal round (one iteration of the ``lax.while_loop``):
-  1. pop the best unevaluated candidate from the sorted list  (Alg.1 l.4)
-  2. fetch its R neighbours, Bloom-filter already-visited ones (l.6, §IV-B)
-  3. PQ-distance the new ones via the ADT                      (l.7)
-  4. merge + sort, keep top L                                  (l.10)
+  1. pop the E best unevaluated candidates from the sorted list (Alg.1 l.4;
+     E = ``SearchConfig.beam_width``, the beam-parallel generalization —
+     the E adjacency fetches of one round are independent NAND page reads
+     issued to parallel planes/channels, §IV-D dataflow)
+  2. fetch their E*R neighbours in one indexed gather, dedup the combined
+     set, Bloom-filter already-visited ones                    (l.6, §IV-B)
+  3. PQ-distance all fresh ones via the ADT in one batch       (l.7)
+  4. one (L + E*R) merge + sort, keep top L                    (l.10)
   5. if the top-T entries are all evaluated: rerank top T with accurate
      distances (cached), check early termination (r stable rounds), then
      grow T by T_step                                          (l.11-16)
@@ -13,8 +17,10 @@ Post-loop: beta-margin rerank of every candidate whose PQ distance is within
 beta of the T-th candidate's, then return top-k by accurate distance (l.19-22).
 
 Counters (per query) feed the NAND performance model and the memory-traffic
-benchmarks: hops (index fetches), pq (code fetches + LUT distance computations),
-acc (raw-vector fetches), hot_hops / free_pq (hot-node repetition hits).
+benchmarks: hops (index fetches = expansions, up to E per round), pq (code
+fetches + LUT distance computations), acc (raw-vector fetches), hot_hops /
+free_pq (hot-node repetition hits), rounds (serial traversal rounds — the
+critical-path length; hops/rounds is the realized beam parallelism).
 """
 from __future__ import annotations
 
@@ -166,6 +172,8 @@ def search(
 
     L, k = cfg.list_size, cfg.k
     R = corpus.adjacency.shape[1]
+    # beam wider than the candidate list can never pop more than L entries
+    E = min(max(int(getattr(cfg, "beam_width", 1)), 1), L)
     use_pq, do_et = cfg.use_pq, cfg.early_termination
     t_init = cfg.t_init if do_et else L
     t_step = cfg.t_step if do_et else L
@@ -222,20 +230,29 @@ def search(
         def body(s: _State):
             valid = s.ids >= 0
             unev = valid & ~s.evaluated
+            n_unev = unev.sum()
             has_unev = unev.any()
-            first = jnp.argmax(unev)                       # best unevaluated
-            v = jnp.where(has_unev, s.ids[first], 0)
+            # positions of unevaluated entries in list (distance) order: a
+            # stable sort of ~unev floats them to the front, so sel[:E] are
+            # the E best unevaluated candidates — the round's beam. E == 1
+            # keeps the original O(L) argmax instead of the O(L log L) sort.
+            if E == 1:
+                sel = jnp.argmax(unev)[None]               # (1,)
+            else:
+                sel = jnp.argsort(~unev, stable=True)[:E]  # (E,) distinct
+            sel_valid = jnp.arange(E) < n_unev             # (E,)
+            vs = jnp.where(sel_valid, s.ids[sel], 0)       # (E,) beam ids
 
-            # ---- expand v --------------------------------------------------
-            neigh = corpus.adjacency[v]                    # (R,)
+            # ---- expand the beam: one E-row adjacency gather ---------------
+            neigh = corpus.adjacency[vs].reshape(E * R)    # (E*R,)
             fresh = _dedup_round(neigh) & ~bloom.contains(s.bits, neigh, num_hashes)
-            fresh = fresh & has_unev
-            nd = tdist(neigh)
+            fresh = fresh & jnp.repeat(sel_valid, R)
+            nd = tdist(neigh)                              # one batched call
             nd = jnp.where(fresh, nd, INF)
             bits = bloom.insert(s.bits, neigh, fresh, num_hashes)
-            evaluated = s.evaluated.at[first].set(s.evaluated[first] | has_unev)
+            evaluated = s.evaluated.at[sel].set(s.evaluated[sel] | sel_valid)
             n_new = fresh.sum()
-            is_hot = v < corpus.hot_count
+            is_hot = (vs < corpus.hot_count) & sel_valid   # (E,)
             ids, dists, acc, evaluated = merge(
                 s.ids, s.dists, s.acc, evaluated,
                 jnp.where(fresh, neigh, -1).astype(jnp.int32), nd,
@@ -266,15 +283,16 @@ def search(
             overflow = t > L
             done = terminated | exhausted | overflow
 
+            hot_new = (fresh.reshape(E, R) & is_hot[:, None]).sum()
             new = _State(
                 ids=ids, dists=dists, acc=acc2, evaluated=evaluated, bits=bits,
                 t=jnp.minimum(t, L), prev_topk=prev_topk, stable=stable,
                 done=done,
-                n_hops=s.n_hops + has_unev.astype(jnp.int32),
+                n_hops=s.n_hops + jnp.minimum(n_unev, E).astype(jnp.int32),
                 n_pq=s.n_pq + (n_new if use_pq else 0),
                 n_acc=s.n_acc + n_acc_new + (0 if use_pq else n_new),
-                n_hot=s.n_hot + (has_unev & is_hot).astype(jnp.int32),
-                n_free=s.n_free + jnp.where(is_hot, n_new, 0),
+                n_hot=s.n_hot + is_hot.sum().astype(jnp.int32),
+                n_free=s.n_free + hot_new,
                 rounds=s.rounds + 1,
             )
             # lanes that were already done keep their state (vmap-safety)
@@ -336,6 +354,10 @@ def search_reference(
 ):
     """Single-query Python loop implementation of Algorithm 1 with an exact
     visited set (no Bloom false positives). Returns (ids, dists, counters).
+    Honours ``cfg.beam_width``: each round pops the E best unevaluated
+    candidates and expands them together, deduplicating the combined
+    neighbour set in beam order (first occurrence wins) — the same wavefront
+    the JAX engine issues, so counters stay comparable at every E.
     If ``trace`` is given, expansion counts are accumulated into it
     (visit-frequency histogram for graph reordering, §IV-E)."""
     if metric == "angular":
@@ -362,6 +384,7 @@ def search_reference(
         return _exact_dist(query, _rows(ids), metric)
 
     L, k = cfg.list_size, cfg.k
+    E = max(int(getattr(cfg, "beam_width", 1)), 1)
     counters = {"hops": 0, "pq": 0, "acc": 0, "hot": 0, "free": 0, "rounds": 0}
     d0 = float(tdist(np.asarray([entry]))[0])
     counters["pq" if cfg.use_pq else "acc"] += 1
@@ -378,23 +401,28 @@ def search_reference(
         unev = [(d, v) for d, v in lst if v not in evaluated]
         if not unev:
             break
-        d_v, v = unev[0]
-        evaluated.add(v)
-        counters["hops"] += 1
-        if trace is not None:
-            trace[v] += 1
-        is_hot = v < hot_count
-        if is_hot:
-            counters["hot"] += 1
-        neigh = [int(u) for u in adjacency[v, : degrees[v]]]
-        neigh = [u for u in dict.fromkeys(neigh) if u not in visited]
-        if neigh:
-            nd = tdist(np.asarray(neigh))
-            counters["pq" if cfg.use_pq else "acc"] += len(neigh)
+        beam = [v for _, v in unev[:E]]           # E best unevaluated
+        fresh: list[int] = []                     # beam-order, deduped
+        fresh_owner_hot: list[bool] = []
+        for v in beam:
+            evaluated.add(v)
+            counters["hops"] += 1
+            if trace is not None:
+                trace[v] += 1
+            is_hot = v < hot_count
             if is_hot:
-                counters["free"] += len(neigh)
-            for u, du in zip(neigh, nd):
-                visited.add(u)
+                counters["hot"] += 1
+            neigh = [int(u) for u in adjacency[v, : degrees[v]]]
+            for u in dict.fromkeys(neigh):
+                if u not in visited:
+                    visited.add(u)                # first occurrence owns u
+                    fresh.append(u)
+                    fresh_owner_hot.append(is_hot)
+        if fresh:
+            nd = tdist(np.asarray(fresh))
+            counters["pq" if cfg.use_pq else "acc"] += len(fresh)
+            counters["free"] += sum(fresh_owner_hot)
+            for u, du in zip(fresh, nd):
                 lst.append((float(du), u))
             lst.sort(key=lambda x: (x[0], ))
             lst = lst[:L]

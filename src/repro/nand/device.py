@@ -31,6 +31,10 @@ class NandConfig:
     n_layers: int = 96
     cores_per_tile: int = 32
     n_tiles: int = 16
+    n_planes: int = 4                 # independent planes per core: the cap
+                                      # on same-round parallel page reads
+                                      # (beam-parallel traversal issues up to
+                                      # min(E, n_planes) reads concurrently)
     # -- timing calibration
     t_wl_setup_ns: float = 20.0       # word-line setup
     t_sense_ns: float = 25.0          # sense amp

@@ -28,6 +28,10 @@ class WorkloadTrace:
     hot_hops: float = 0.0       # expansions served by hot-node repetition
     free_pq: float = 0.0        # PQ fetches covered by hot pages
     rounds: float = 0.0
+    beam_width: float = 1.0     # E — expansions issued per traversal round;
+                                # up to min(E, NandConfig.n_planes) of a
+                                # round's page reads overlap on parallel
+                                # planes, shortening the serial pointer-chase
     dim: int = 128
     r_degree: int = 64
     index_bits: int = 32        # 32 uncompressed; 20-26 gap-encoded
@@ -221,10 +225,15 @@ def simulate(
         trace.r_degree * (trace.index_bits + trace.pq_bits) + trace.pq_bits
     ) / 8.0
     # critical path: per cold hop an index fetch followed by one (parallel)
-    # neighbour-code wave; per hot hop one single-shot activation
+    # neighbour-code wave; per hot hop one single-shot activation. With
+    # beam-parallel traversal the E expansions of one round are concurrent
+    # page reads on independent planes, so the serial chain is divided by
+    # the realized plane parallelism min(E, n_planes) — rounds, not hops,
+    # set the pointer-chase length.
+    par = max(1.0, min(trace.beam_width, float(nand.n_planes)))
     s_t0 = (
-        cold_hops * 2.0 * t_core
-        + trace.hot_hops * nand.access_latency_ns(int(hot_bytes_each))
+        cold_hops * 2.0 * t_core / par
+        + trace.hot_hops * nand.access_latency_ns(int(hot_bytes_each)) / par
         + 2.0 * t_core  # rerank waves (pipelined raw fetches)
     )
 
@@ -311,13 +320,19 @@ def simulate_mixed(
 
 
 def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
-                             metric="l2", use_pq=True, use_hot=True) -> WorkloadTrace:
+                             metric="l2", use_pq=True, use_hot=True,
+                             beam_width=None) -> WorkloadTrace:
     """Average the per-query counters of a core.search SearchResult.
 
     A ``shard.ShardedSearchResult`` is accepted too: its (P, Q) counters are
     summed across the tile axis first, so the trace carries the TOTAL work a
     query costs across all channels (use ``traces_from_sharded_result`` +
-    ``simulate_sharded`` for the per-channel view)."""
+    ``simulate_sharded`` for the per-channel view).
+
+    ``beam_width`` defaults to the REALIZED per-round expansion parallelism
+    measured from the counters themselves (mean hops / mean rounds — the
+    n_hops-vs-rounds separation core.search maintains); pass the configured
+    ``SearchConfig.beam_width`` explicitly to bill the nominal E instead."""
     import numpy as np
 
     if hasattr(res, "per_tile"):
@@ -325,21 +340,27 @@ def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
         f = lambda x: float(np.asarray(x).sum(0).mean())
     else:
         f = lambda x: float(np.asarray(x).mean())
+    hops, rounds = f(res.n_hops), f(res.rounds)
+    if beam_width is None:
+        beam_width = hops / max(rounds, 1.0)
     return WorkloadTrace(
-        hops=f(res.n_hops), pq=f(res.n_pq), acc=f(res.n_acc),
+        hops=hops, pq=f(res.n_pq), acc=f(res.n_acc),
         hot_hops=f(res.n_hot_hops) if use_hot else 0.0,
         free_pq=f(res.n_free_pq) if use_hot else 0.0,
-        rounds=f(res.rounds), dim=dim, r_degree=r_degree,
+        rounds=rounds, beam_width=max(float(beam_width), 1.0),
+        dim=dim, r_degree=r_degree,
         index_bits=index_bits, pq_bits=pq_bits, raw_bytes=dim * 4,
         metric=metric, use_pq=use_pq,
     )
 
 
 def traces_from_sharded_result(res, *, dim, r_degree, index_bits, pq_bits,
-                               metric="l2", use_pq=True,
-                               use_hot=True) -> list[WorkloadTrace]:
+                               metric="l2", use_pq=True, use_hot=True,
+                               beam_width=None) -> list[WorkloadTrace]:
     """Per-tile workload traces from a ``shard.ShardedSearchResult`` — the
-    per-tile counter axis maps 1:1 onto NAND channel groups."""
+    per-tile counter axis maps 1:1 onto NAND channel groups. ``beam_width``
+    propagates to every channel trace (None -> realized hops/rounds,
+    measured per tile)."""
     per = res.per_tile if hasattr(res, "per_tile") else res
     num_tiles = per.ids.shape[0]
     return [
@@ -347,6 +368,7 @@ def traces_from_sharded_result(res, *, dim, r_degree, index_bits, pq_bits,
             type(per)(*(f[p] for f in per)),
             dim=dim, r_degree=r_degree, index_bits=index_bits,
             pq_bits=pq_bits, metric=metric, use_pq=use_pq, use_hot=use_hot,
+            beam_width=beam_width,
         )
         for p in range(num_tiles)
     ]

@@ -57,10 +57,13 @@ class ServingEngine:
         num_tiles: Optional[int] = None,
         shard_policy: Optional[str] = None,
         probe_tiles: Optional[int] = None,
+        beam_width: Optional[int] = None,
     ):
         self.mutable = index if isinstance(index, MutableIndex) else None
         self._index = index.base if self.mutable else index
         self.cfg = cfg or self.index.config.search
+        if beam_width is not None:
+            self.cfg = dataclasses.replace(self.cfg, beam_width=beam_width)
         self.metric = self.index.dataset.metric
         self.batch_size = batch_size
         self.flush_us = flush_us
@@ -68,7 +71,6 @@ class ServingEngine:
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self._next = 0
-        self._last_flush = time.time()
         self.stats = {
             "batches": 0, "queries": 0, "pad_fraction": 0.0,
             "inserts": 0, "deletes": 0, "consolidations": 0,
@@ -196,11 +198,19 @@ class ServingEngine:
 
     # ------------------------------------------------------------- scheduling
     def _flush_due(self) -> bool:
+        """Full batch, or the OLDEST QUEUED request has waited ``flush_us``.
+
+        The timeout is anchored to the head request's submit time, not the
+        last flush: after an idle gap the first request of a new burst must
+        still wait its full window for batch-mates (measuring from the last
+        flush made it flush immediately in a batch of 1, defeating
+        batching). An empty->nonempty enqueue restarts the clock naturally —
+        the new head carries a fresh ``t_submit``."""
         if len(self.queue) >= self.batch_size:
             return True
         return (
             bool(self.queue)
-            and (time.time() - self._last_flush) * 1e6 >= self.flush_us
+            and (time.time() - self.queue[0].t_submit) * 1e6 >= self.flush_us
         )
 
     def step(self, force: bool = False) -> List[Request]:
@@ -222,10 +232,14 @@ class ServingEngine:
         for i, r in enumerate(batch):
             r.ids, r.dists, r.t_done = ids[i], dists[i], now
             self.done[r.rid] = r
-        self.stats["batches"] += 1
+        # running MEAN pad fraction over all batches (a sum would grow
+        # without bound and read as >100% padding after a few batches)
+        b = self.stats["batches"]
+        self.stats["pad_fraction"] = (
+            self.stats["pad_fraction"] * b + (bucket - n) / bucket
+        ) / (b + 1)
+        self.stats["batches"] = b + 1
         self.stats["queries"] += n
-        self.stats["pad_fraction"] += (bucket - n) / bucket
-        self._last_flush = now
         if (
             self.auto_consolidate
             and self.mutable is not None

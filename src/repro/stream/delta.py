@@ -106,6 +106,11 @@ class DeltaSegment:
         self.degrees[j] = len(kept)
 
     # --------------------------------------------------------------- search
+    def _brute_force(self) -> bool:
+        """Exact scan while the segment is tiny (one shared regime switch for
+        the single-query and batched paths — they must never diverge)."""
+        return self.count <= self.stream_cfg.brute_force_below
+
     def search(self, query: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
         """Top-k over the segment by accurate distance. Brute force while the
         segment is tiny; greedy graph search once it pays off. Returns
@@ -113,10 +118,10 @@ class DeltaSegment:
         if self.count == 0:
             return (np.empty((0,), np.int32), np.empty((0,), np.float32))
         q = np.asarray(query, np.float32).reshape(-1)
-        if self.count <= max(self.stream_cfg.brute_force_below, k):
-            d = pairwise_dist(q[None], self.vecs[: self.count], self.metric)[0]
-            order = np.argsort(d, kind="stable")[:k]
-            return order.astype(np.int32), d[order].astype(np.float32)
+        if self._brute_force() or self.count <= k:
+            ids, d = self.search_batch(q[None], k)   # the one brute-force path
+            got = int((ids[0] >= 0).sum())
+            return ids[0, :got], d[0, :got]
         if self.metric == "angular":
             q = q / max(float(np.linalg.norm(q)), 1e-12)
         scored, _ = _greedy_search_np(
@@ -128,6 +133,31 @@ class DeltaSegment:
             np.asarray([u for u, _ in top], np.int32),
             np.asarray([d for _, d in top], np.float32),
         )
+
+    def search_batch(self, queries: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Batched top-k over the segment: (Q, k) local ids (-1 padded) and
+        distances (+inf padded). The brute-force regime — the common case,
+        the segment is tiny between consolidations — is one vectorized
+        distance matrix over ALL queries; only the graph regime walks per
+        query (a host-side greedy search has no batch form)."""
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = q.shape[0]
+        out_ids = np.full((nq, k), -1, np.int32)
+        out_d = np.full((nq, k), np.inf, np.float32)
+        if self.count == 0:
+            return out_ids, out_d
+        if self._brute_force() or self.count <= k:
+            d = pairwise_dist(q, self.vecs[: self.count], self.metric)
+            got = min(k, self.count)
+            order = np.argsort(d, axis=1, kind="stable")[:, :got]
+            out_ids[:, :got] = order.astype(np.int32)
+            out_d[:, :got] = np.take_along_axis(d, order, 1).astype(np.float32)
+            return out_ids, out_d
+        for i in range(nq):
+            ids_i, d_i = self.search(q[i], k)
+            out_ids[i, : len(ids_i)] = ids_i
+            out_d[i, : len(d_i)] = d_i
+        return out_ids, out_d
 
     # ---------------------------------------------------------- accounting
     def logical_bytes_per_insert(self) -> float:

@@ -3,9 +3,11 @@
 The compiled fixed-shape JAX base search runs untouched (same shapes it was
 jitted for); the base is merely over-fetched by ``StreamConfig.base_overfetch``
 candidates so tombstoned hits can be dropped without losing recall. The delta
-segment is searched host-side (it is DRAM-resident and small by construction),
-and the two candidate streams are fused per query by *accurate* distance —
-both paths score with the same metric, so the merge is a plain top-k.
+segment is searched host-side in one batched call for the whole query batch
+(it is DRAM-resident and small by construction), and the two candidate
+streams are fused by *accurate* distance in a single vectorized tombstone
+mask + row-wise top-k — both paths score with the same metric, so the merge
+is a plain argsort. Result ids are int32, matching the base path.
 
 When the mutable index is configured with ``num_tiles > 1`` the base segment
 runs channel-parallel (``shard.sharded_search`` over per-tile graphs, with
@@ -25,7 +27,8 @@ from repro.core.search import SearchResult, search
 
 
 class MergedResult(NamedTuple):
-    ids: np.ndarray             # (Q, k) external ids, -1 padded
+    ids: np.ndarray             # (Q, k) int32 external ids, -1 padded
+                                # (same dtype as the base path's ids)
     dists: np.ndarray           # (Q, k) accurate distances, +inf padded
     base: Union[SearchResult, object]  # raw base result; with a tiled base
                                 # this is shard.ShardedSearchResult (its
@@ -66,28 +69,36 @@ def search_merged(
     ext = np.where(keep, ext, -1)
 
     nq = q.shape[0]
-    out_ids = np.full((nq, k), -1, np.int64)
-    out_d = np.full((nq, k), np.inf, np.float32)
-    n_delta = np.zeros((nq,), np.int32)
     delta = mutable.delta
-    delta_ext = np.asarray(mutable.delta_ext, np.int64)
-    for i in range(nq):
-        cand_ids, cand_d = ext[i], base_d[i]
-        if len(delta):
-            # same tombstone slack as the base path: deleted delta vectors
-            # must not crowd live ones out of the candidate set
-            dl_ids, dl_d = delta.search(
-                q[i], k + mutable.stream_cfg.base_overfetch
-            )
-            n_delta[i] = len(dl_ids)
-            if len(dl_ids):
-                dl_ext = delta_ext[dl_ids]
-                alive = ~mutable.tombstone_mask(dl_ext)
-                cand_ids = np.concatenate([cand_ids, dl_ext[alive]])
-                cand_d = np.concatenate([cand_d, dl_d[alive]])
-        order = np.argsort(cand_d, kind="stable")[:k]
-        got = min(k, int(np.isfinite(cand_d[order]).sum()))
-        out_ids[i, :got] = cand_ids[order][:got]
-        out_d[i, :got] = cand_d[order][:got]
+    cand_ids, cand_d = ext, base_d                    # (Q, k_base)
+    n_delta = np.zeros((nq,), np.int32)
+    if len(delta):
+        # one batched delta search for the whole query batch, with the same
+        # tombstone slack as the base path: deleted delta vectors must not
+        # crowd live ones out of the candidate set
+        dl_ids, dl_d = delta.search_batch(
+            q, k + mutable.stream_cfg.base_overfetch
+        )                                             # (Q, k_delta)
+        delta_ext = np.asarray(mutable.delta_ext, np.int64)
+        dl_ext = np.where(
+            dl_ids >= 0, delta_ext[np.clip(dl_ids, 0, None)], -1
+        )
+        alive = (dl_ids >= 0) & ~mutable.tombstone_mask(dl_ext)
+        n_delta = (dl_ids >= 0).sum(1).astype(np.int32)
+        cand_ids = np.concatenate(
+            [cand_ids, np.where(alive, dl_ext, -1)], axis=1
+        )
+        cand_d = np.concatenate(
+            [cand_d, np.where(alive, dl_d, np.inf)], axis=1
+        )
+    # vectorized cross-segment merge: one row-wise stable argsort, top-k
+    if cand_d.shape[1] < k:                           # degenerate list_size < k
+        pad = k - cand_d.shape[1]
+        cand_ids = np.pad(cand_ids, ((0, 0), (0, pad)), constant_values=-1)
+        cand_d = np.pad(cand_d, ((0, 0), (0, pad)), constant_values=np.inf)
+    order = np.argsort(cand_d, axis=1, kind="stable")[:, :k]
+    out_d = np.take_along_axis(cand_d, order, 1).astype(np.float32)
+    out_ids = np.take_along_axis(cand_ids, order, 1).astype(np.int32)
+    out_ids = np.where(np.isfinite(out_d), out_ids, np.int32(-1))
     return MergedResult(ids=out_ids, dists=out_d, base=res,
                         delta_candidates=n_delta)

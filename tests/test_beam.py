@@ -1,0 +1,149 @@
+"""Beam-parallel traversal (SearchConfig.beam_width = E).
+
+The contract: E=1 IS the pre-beam single-expansion engine (bit-identical
+results and counters), the reference oracle pops the same E-wide beam (so
+counter parity holds at every E), and E>1 trades a little extra frontier
+work for ~E× fewer serial traversal rounds at iso-recall — which the NAND
+model bills as plane-parallel page reads."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import recall_at_k, search, search_reference
+from repro.nand.simulator import WorkloadTrace, simulate, trace_from_search_result
+
+
+def _run(idx, cfg):
+    return search(idx.corpus(), idx.dataset.queries, cfg, idx.dataset.metric)
+
+
+def _oracle(idx, cfg, i):
+    return search_reference(
+        idx.graph.adjacency, idx.graph.degrees, idx.codes,
+        idx._search_base(), idx.codebook.centroids,
+        idx.graph.entry_point, idx.dataset.queries[i], cfg,
+        idx.dataset.metric, hot_count=idx.hot_count,
+    )
+
+
+def test_beam1_matches_single_expansion_oracle(tiny_index):
+    """beam_width=1 reproduces the pre-beam single-expansion path exactly:
+    with E=1 the oracle's loop IS the original Algorithm-1 transliteration
+    (one pop per round), and the JAX engine must agree bit-for-bit on the
+    result ids and every traversal counter. (`acc` is excluded: the JAX
+    batch beta-rerank has always counted a handful more accurate distances
+    than the oracle's incremental cache — a pre-beam divergence.)"""
+    idx = tiny_index
+    cfg = dataclasses.replace(idx.config.search, beam_width=1)
+    res = _run(idx, cfg)
+    for i in range(len(idx.dataset.queries)):
+        rid, _, cnt = _oracle(idx, cfg, i)
+        assert set(np.asarray(res.ids[i]).tolist()) == set(rid.tolist())
+        assert int(res.n_hops[i]) == cnt["hops"]
+        assert int(res.n_pq[i]) == cnt["pq"]
+        assert int(res.n_hot_hops[i]) == cnt["hot"]
+        assert int(res.n_free_pq[i]) == cnt["free"]
+        assert int(res.rounds[i]) == cnt["rounds"]
+        assert int(res.n_hops[i]) == int(res.rounds[i])  # 1 expansion/round
+
+
+def test_beam_oracle_counter_parity_wide(tiny_index):
+    """The oracle grows the same E-wide pop: counters stay bit-comparable
+    at E=4 (same wavefront, same beam-order dedup attribution)."""
+    idx = tiny_index
+    cfg = dataclasses.replace(idx.config.search, beam_width=4)
+    res = _run(idx, cfg)
+    for i in range(8):
+        rid, _, cnt = _oracle(idx, cfg, i)
+        assert int(res.n_hops[i]) == cnt["hops"]
+        assert int(res.n_pq[i]) == cnt["pq"]
+        assert int(res.n_hot_hops[i]) == cnt["hot"]
+        assert int(res.n_free_pq[i]) == cnt["free"]
+        assert int(res.rounds[i]) == cnt["rounds"]
+        assert set(np.asarray(res.ids[i]).tolist()) == set(rid.tolist())
+
+
+def test_beam_cuts_rounds_at_iso_recall(tiny_index):
+    """The tentpole claim: E=4 reduces mean traversal rounds >= 1.5x with
+    recall within 0.01 of the E=1 baseline."""
+    idx = tiny_index
+    r1 = _run(idx, dataclasses.replace(idx.config.search, beam_width=1))
+    r4 = _run(idx, dataclasses.replace(idx.config.search, beam_width=4))
+    rounds1 = float(np.asarray(r1.rounds).mean())
+    rounds4 = float(np.asarray(r4.rounds).mean())
+    assert rounds1 / rounds4 >= 1.5, f"round speedup {rounds1 / rounds4:.2f}x"
+    rec1 = recall_at_k(np.asarray(r1.ids), idx.dataset.gt, 10)
+    rec4 = recall_at_k(np.asarray(r4.ids), idx.dataset.gt, 10)
+    assert rec4 >= rec1 - 0.01, f"recall {rec4:.4f} vs E=1 {rec1:.4f}"
+    # rounds-vs-hops separation: E expansions per round, up to the beam cap
+    hops4 = float(np.asarray(r4.n_hops).mean())
+    assert 1.0 < hops4 / rounds4 <= 4.0
+
+
+def test_beam_pallas_path_equivalence(tiny_index):
+    """The (L + E*R) merge through the Pallas bitonic network agrees with
+    the jnp path at E>1."""
+    idx = tiny_index
+    cfg = dataclasses.replace(idx.config.search, list_size=32, t_init=8,
+                              beam_width=4)
+    plain = _run(idx, cfg)
+    pall = _run(idx, dataclasses.replace(cfg, use_pallas=True))
+    a = np.sort(np.asarray(plain.ids), 1)
+    b = np.sort(np.asarray(pall.ids), 1)
+    assert (a == b).mean() > 0.95
+
+
+def test_nand_bills_beam_as_plane_parallel_reads(tiny_index):
+    """The simulator divides the serial pointer-chase by min(E, n_planes):
+    the measured E=4 trace must be faster than the same counters billed at
+    beam_width=1, and trace_from_search_result derives the realized beam
+    from the hops/rounds separation."""
+    idx = tiny_index
+    res = _run(idx, dataclasses.replace(idx.config.search, beam_width=4))
+    kw = dict(dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
+              index_bits=32, pq_bits=idx.codebook.num_subvectors * 8)
+    t4 = trace_from_search_result(res, **kw)
+    assert 1.0 < t4.beam_width <= 4.0          # realized hops/rounds
+    t1 = dataclasses.replace(t4, beam_width=1.0)
+    sim4, sim1 = simulate(t4), simulate(t1)
+    assert sim4.latency_us < sim1.latency_us
+    assert sim4.qps > sim1.qps
+    # explicit override wins over the derived value
+    t_exp = trace_from_search_result(res, **kw, beam_width=4)
+    assert t_exp.beam_width == 4.0
+    # the plane count caps the billed parallelism
+    t_wide = dataclasses.replace(t4, beam_width=64.0)
+    from repro.nand.device import NandConfig
+
+    nand = NandConfig()
+    sim_wide = simulate(t_wide, nand)
+    t_cap = dataclasses.replace(t4, beam_width=float(nand.n_planes))
+    assert sim_wide.latency_us == pytest.approx(simulate(t_cap, nand).latency_us)
+
+
+def test_beam_inherited_by_sharded_and_merged_paths(tiny_index):
+    """shard.sharded_search and stream.search_merged pick beam_width up from
+    the config untouched — per-tile/base rounds shrink the same way."""
+    from repro.shard import sharded_search
+    from repro.stream.mutable import MutableIndex
+    from repro.stream.searcher import search_merged
+
+    idx = tiny_index
+    q = idx.dataset.queries[:8]
+    cfg1 = dataclasses.replace(idx.config.search, beam_width=1)
+    cfg4 = dataclasses.replace(idx.config.search, beam_width=4)
+
+    tiled, _ = idx.sharded_corpus(2, "hash")
+    s1 = sharded_search(tiled, q, cfg1, idx.dataset.metric)
+    s4 = sharded_search(tiled, q, cfg4, idx.dataset.metric)
+    assert (np.asarray(s4.per_tile.rounds).mean()
+            < np.asarray(s1.per_tile.rounds).mean())
+
+    mut = MutableIndex(idx)
+    mut.insert(idx.dataset.queries[0])
+    m1 = search_merged(mut, q, cfg1)
+    m4 = search_merged(mut, q, cfg4)
+    assert m4.ids.dtype == np.int32
+    assert (np.asarray(m4.base.rounds).mean()
+            < np.asarray(m1.base.rounds).mean())

@@ -41,6 +41,21 @@ for mode in ("nsp", "fetch"):
     match = (got == single).mean()
     assert match == 1.0, f"mode={mode}: match={match}"
     print(f"mode={mode}: exact match")
+
+# beam-parallel traversal distributes identically: E=4 must stay
+# bit-identical to the single-device beam search
+import dataclasses
+cfg4 = dataclasses.replace(cfg.search, beam_width=4)
+res4 = search(idx.corpus(), idx.dataset.queries, cfg4, idx.dataset.metric)
+single4 = np.sort(np.asarray(res4.ids), axis=1)
+assert np.asarray(res4.rounds).mean() < np.asarray(res.rounds).mean()
+for mode in ("nsp", "fetch"):
+    ids, d = distributed_search(sc, idx.dataset.queries, cfg4,
+                                idx.dataset.metric, mode=mode, mesh=mesh)
+    got = np.sort(np.asarray(ids), axis=1)
+    match = (got == single4).mean()
+    assert match == 1.0, f"mode={mode} E=4: match={match}"
+    print(f"mode={mode} E=4: exact match")
 print("OK")
 """
 

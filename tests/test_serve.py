@@ -59,7 +59,6 @@ def test_engine_flush_timeout(tiny_index):
     import time as _time
 
     eng = ServingEngine(tiny_index, batch_size=8, flush_us=5e4)  # 50 ms
-    eng._last_flush = _time.time()
     eng.submit(tiny_index.dataset.queries[0])
     assert eng.step() == []                       # timeout not reached
     assert len(eng.queue) == 1
@@ -68,6 +67,58 @@ def test_engine_flush_timeout(tiny_index):
     assert [r.rid for r in out] == [0]
     assert not eng.queue
     assert eng.done[0].latency_ms >= 50.0         # waited for the timeout
+
+
+def test_engine_flush_timeout_after_idle_gap(tiny_index):
+    """Regression: the flush timeout is anchored to the head request's
+    submit time, not the last flush. After an idle gap longer than
+    flush_us, the first submitted request must still wait its full window
+    for batch-mates instead of flushing immediately in a batch of 1."""
+    import time as _time
+
+    eng = ServingEngine(tiny_index, batch_size=8, flush_us=5e4)  # 50 ms
+    _time.sleep(0.08)                 # idle gap > flush_us since construction
+    eng.submit(tiny_index.dataset.queries[0])
+    assert eng.step() == [], "flushed immediately after an idle gap"
+    eng.submit(tiny_index.dataset.queries[1])   # joins the pending batch
+    assert len(eng.queue) == 2
+    _time.sleep(0.06)
+    out = eng.step()                  # head has now waited >= flush_us
+    assert sorted(r.rid for r in out) == [0, 1]
+
+
+def test_engine_pad_fraction_is_bounded_mean(tiny_index):
+    """Regression: stats['pad_fraction'] reports the running mean over
+    batches (the old accumulating sum grew without bound)."""
+    eng = ServingEngine(tiny_index, batch_size=8, flush_us=0.0)
+    for qq in tiny_index.dataset.queries[:6]:   # 6 batches of 1 -> pad 0/1
+        eng.submit(qq)
+        eng.drain()
+    assert eng.stats["batches"] == 6
+    assert 0.0 <= eng.stats["pad_fraction"] <= 1.0
+    assert eng.stats["pad_fraction"] == 0.0     # batch of 1 -> bucket of 1
+    rids = [eng.submit(qq) for qq in tiny_index.dataset.queries[:3]]
+    eng.drain()                                 # 3 queries -> bucket of 4
+    assert eng.stats["batches"] == 7
+    assert eng.stats["pad_fraction"] == pytest.approx((6 * 0.0 + 0.25) / 7)
+
+
+def test_engine_beam_width_exposed(tiny_index):
+    """ServingEngine(beam_width=E) overrides the config end to end and
+    serves the same result sets as the direct beam search."""
+    import dataclasses
+
+    eng = ServingEngine(tiny_index, batch_size=8, flush_us=0.0, beam_width=4)
+    assert eng.cfg.beam_width == 4
+    q = tiny_index.dataset.queries[:8]
+    rids = [eng.submit(qq) for qq in q]
+    eng.drain()
+    got = np.stack([eng.done[r].ids for r in rids])
+    cfg4 = dataclasses.replace(tiny_index.config.search, beam_width=4)
+    direct = np.asarray(
+        search(tiny_index.corpus(), q, cfg4, tiny_index.dataset.metric).ids
+    )
+    assert (np.sort(got, 1) == np.sort(direct, 1)).all()
 
 
 def test_engine_step_noop_without_requests(tiny_index):
