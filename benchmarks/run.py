@@ -2,8 +2,12 @@
 Prints ``name,us_per_call,derived`` CSV lines (see each module's docstring
 for the paper claim it validates).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig11,fig13]
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,fig13] [--list]
     REPRO_BENCH_SCALE=full for the larger corpora.
+
+``--only`` takes EXACT module names; append ``*`` for explicit prefix
+matching (``--only 'fig1*'`` runs fig11..fig17 — a bare ``fig1`` used to,
+silently). ``--list`` prints the registered modules and exits.
 """
 from __future__ import annotations
 
@@ -25,20 +29,51 @@ MODULES = [
     "streaming_bench",
     "sharded_bench",
     "beam_bench",
+    "filtered_bench",
     "kernels_bench",
     "roofline_bench",
 ]
 
+# runs in its own subprocess (needs 512 host devices), not importable here
+SUBPROCESS_MODULES = ["proxima_dryrun"]
+
+
+def selected(modname: str, only: list[str]) -> bool:
+    """Exact-name match, with ``pattern*`` as the explicit prefix opt-in."""
+    for o in only:
+        if o.endswith("*"):
+            if modname.startswith(o[:-1]):
+                return True
+        elif modname == o:
+            return True
+    return False
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module names (exact; 'prefix*' "
+                         "for prefix matching)")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark modules and exit")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
+    if args.list:
+        for modname in MODULES + SUBPROCESS_MODULES:
+            print(modname)
+        return
+
+    unknown = [o for o in only
+               if not any(selected(m, [o]) for m in MODULES + SUBPROCESS_MODULES)]
+    if unknown:
+        print(f"# --only matched nothing for: {', '.join(unknown)} "
+              f"(see --list; use 'prefix*' for prefix matching)",
+              file=sys.stderr)
+
     print("name,us_per_call,derived")
     for modname in MODULES:
-        if only and not any(modname.startswith(o) for o in only):
+        if only and not selected(modname, only):
             continue
         t0 = time.time()
         try:
@@ -50,7 +85,7 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
 
     # distributed-search dry-run needs 512 host devices -> own process
-    if not only or any("proxima" in o for o in only):
+    if not only or selected("proxima_dryrun", only):
         import os
         import subprocess
 

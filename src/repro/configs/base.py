@@ -267,6 +267,32 @@ class ShardConfig:
 
 
 @dataclass(frozen=True)
+class FilterConfig:
+    """Filtered-search subsystem parameters (``repro.filter``).
+
+    A ``FilterSpec`` compiles to a per-node boolean mask; the selectivity
+    estimator routes each filtered query to one of two regimes:
+
+      * moderate selectivity — masked graph traversal with an inflated
+        effective ``list_size`` (non-passing nodes still route but cannot
+        enter the result set, so the frontier must be wider to accumulate
+        ``k`` passing candidates) and a relaxed early-termination threshold;
+      * high selectivity (``<= brute_force_selectivity``) — a bitmap-driven
+        brute-force PQ scan over the passing subset, exact-reranked.
+
+    ``attr_bits`` is the per-node attribute word the NAND model bills as a
+    spare-area read co-located with the adjacency page (predicate pushdown,
+    see ``nand.simulator``).
+    """
+    attr_bits: int = 32               # spare-area attribute word per node
+    brute_force_selectivity: float = 0.02  # <= this -> bitmap PQ scan
+    inflate_cap: int = 8              # max list_size inflation (pow2-quantized)
+    relax_repetition: int = 1         # extra stable rounds under a filter
+    scan_rerank: int = 4              # scan mode reranks top scan_rerank*k
+    pushdown: bool = True             # evaluate predicates inside the tile
+
+
+@dataclass(frozen=True)
 class ProximaConfig:
     dataset: DatasetConfig = field(default_factory=DatasetConfig)
     pq: PQConfig = field(default_factory=PQConfig)
@@ -274,6 +300,7 @@ class ProximaConfig:
     search: SearchConfig = field(default_factory=SearchConfig)
     stream: StreamConfig = field(default_factory=StreamConfig)
     shard: ShardConfig = field(default_factory=ShardConfig)
+    filter: FilterConfig = field(default_factory=FilterConfig)
     hot_node_fraction: float = 0.03   # paper default 3%
     gap_encode: bool = True
 

@@ -59,10 +59,15 @@ def pairwise_dist(q: np.ndarray, x: np.ndarray, metric: str) -> np.ndarray:
 def exact_knn(
     queries: np.ndarray, base: np.ndarray, k: int, metric: str, chunk: int = 512
 ) -> np.ndarray:
+    k = min(k, base.shape[0])   # a tiny corpus (e.g. a sharp filter's
+                                # passing subset) caps the answer size
     out = np.empty((queries.shape[0], k), dtype=np.int32)
     for s in range(0, queries.shape[0], chunk):
         d = pairwise_dist(queries[s : s + chunk], base, metric)
-        idx = np.argpartition(d, k, axis=1)[:, :k]
+        if k < d.shape[1]:
+            idx = np.argpartition(d, k, axis=1)[:, :k]
+        else:                   # argpartition needs kth < n; full sort below
+            idx = np.broadcast_to(np.arange(k), d.shape[:1] + (k,))
         row = np.take_along_axis(d, idx, axis=1)
         order = np.argsort(row, axis=1, kind="stable")
         out[s : s + chunk] = np.take_along_axis(idx, order, axis=1)

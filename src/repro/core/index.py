@@ -40,6 +40,10 @@ class ProximaIndex:
     gap: Optional[GapEncodedGraph]
     reordering: Optional[Reordering]
     calibrated_beta: float
+    # per-node attribute store for the filtered-search subsystem, keyed by
+    # the CURRENT (reordered) internal ids; attach via
+    # ``repro.filter.attach_attributes`` (workload data, not built here)
+    attributes: Optional[object] = None
 
     @property
     def hot_count(self) -> int:

@@ -16,6 +16,15 @@ Per traversal round (one iteration of the ``lax.while_loop``):
 Post-loop: beta-margin rerank of every candidate whose PQ distance is within
 beta of the T-th candidate's, then return top-k by accurate distance (l.19-22).
 
+Filtered traversal (``node_mask``, the ``repro.filter`` subsystem): a (N,)
+boolean pass mask restricts *result admission*, never routing — non-passing
+nodes still enter the candidate list and route the traversal exactly as
+before, but only mask-passing nodes count for the early-termination top-k,
+the beta-margin rerank threshold (taken at the T-th *passing* candidate) and
+the final top-k. With an all-true mask every selection reduces to the
+unfiltered arithmetic, so an all-pass filter is bit-identical to
+``node_mask=None`` at every beam width.
+
 Counters (per query) feed the NAND performance model and the memory-traffic
 benchmarks: hops (index fetches = expansions, up to E per round), pq (code
 fetches + LUT distance computations), acc (raw-vector fetches), hot_hops /
@@ -81,6 +90,18 @@ def next_pow2(n: int) -> int:
     """Smallest power of two >= n (n >= 1) — bitonic networks and compiled
     batch buckets all pad to this."""
     return 1 << max(n - 1, 0).bit_length()
+
+
+def empty_search_result(nq: int, k: int) -> SearchResult:
+    """A no-work result batch: -1 ids, +inf distances, zeroed counters —
+    what a skipped channel (zero-pass tile) or an empty-filter query batch
+    contributes."""
+    z = jnp.zeros((nq,), jnp.int32)
+    return SearchResult(
+        ids=jnp.full((nq, k), -1, jnp.int32),
+        dists=jnp.full((nq, k), jnp.inf, jnp.float32),
+        n_hops=z, n_pq=z, n_acc=z, n_hot_hops=z, n_free_pq=z, rounds=z,
+    )
 
 
 def l2_normalize(x, xp=jnp):
@@ -165,8 +186,11 @@ def search(
     metric: str = "l2",
     bloom_bits: int = 1 << 17,
     num_hashes: int = 8,
+    node_mask: jnp.ndarray | None = None,
 ) -> SearchResult:
-    """Batched Proxima search. queries: (Q, D)."""
+    """Batched Proxima search. queries: (Q, D). ``node_mask`` (N,) bool, if
+    given, admits only passing nodes to the result set (filtered search —
+    see the module docstring)."""
     if metric == "angular":
         queries = l2_normalize(queries)
 
@@ -192,6 +216,14 @@ def search(
         adts = jnp.zeros((queries.shape[0], 1, 1), jnp.float32)
 
     merge = _merge_sort_topl_bitonic if cfg.use_pallas else _merge_sort_topl
+
+    def passes_of(ids):
+        """Valid AND mask-passing, elementwise (-1 slots never pass). With
+        ``node_mask=None`` this is plain validity — the unfiltered path."""
+        valid = ids >= 0
+        if node_mask is None:
+            return valid
+        return valid & node_mask[jnp.maximum(ids, 0)]
 
     def one_query(q, adt):
         def tdist(ids):
@@ -260,18 +292,22 @@ def search(
 
             # ---- top-T evaluated? -> rerank + early-termination ------------
             valid = ids >= 0
+            pl = passes_of(ids)
             in_t = (jnp.arange(L) < s.t) & valid
             all_eval = jnp.where(in_t.any(), (~in_t | evaluated).all(), False)
 
-            need = in_t & jnp.isinf(acc)
+            # only passing candidates are admitted to the reranked top-k
+            # (non-passing ones still route; in_t implies valid, so with no
+            # mask in_t & pl == in_t and this is the unfiltered arithmetic)
+            need = in_t & pl & jnp.isinf(acc)
             acc_new = _exact_dist(q, corpus.base[jnp.maximum(ids, 0)], metric)
             acc2 = jnp.where(need & all_eval, acc_new, acc)
             n_acc_new = jnp.where(all_eval, need.sum(), 0)
             if use_pq:
-                rerank_key = jnp.where(in_t, acc2, INF)
+                rerank_key = jnp.where(in_t & pl, acc2, INF)
             else:
                 acc2 = jnp.where(valid, dists, INF)
-                rerank_key = jnp.where(in_t, acc2, INF)
+                rerank_key = jnp.where(in_t & pl, acc2, INF)
             new_topk = _topk_ids_by(ids, rerank_key, k)
             same = (new_topk == s.prev_topk).all()
             stable = jnp.where(all_eval, jnp.where(same, s.stable + 1, 1), s.stable)
@@ -306,11 +342,29 @@ def search(
 
     # ---- final beta rerank, batched (Alg.1 l.19-21; Pallas l2_rerank) ------
     valid = s.ids >= 0                                       # (Q, L)
-    t_idx = jnp.clip(s.t, 1, L) - 1
-    d_t = jnp.take_along_axis(s.dists, t_idx[:, None], 1)[:, 0]
-    thr = d_t + (cfg.beta - 1.0) * jnp.abs(d_t)              # sign-safe margin
+    pass_l = passes_of(s.ids)                                # (Q, L)
+    if node_mask is None:
+        t_idx = jnp.clip(s.t, 1, L) - 1
+        d_t = jnp.take_along_axis(s.dists, t_idx[:, None], 1)[:, 0]
+        thr = d_t + (cfg.beta - 1.0) * jnp.abs(d_t)          # sign-safe margin
+    else:
+        # margin anchor = the T-th PASSING candidate's distance. The list
+        # is distance-sorted with all valid entries a prefix, so with an
+        # all-true mask "T-th passing" is exactly position T-1 (or the +inf
+        # padding when fewer than T are valid) — bit-identical to the
+        # unfiltered read above.
+        rank = jnp.cumsum(pass_l, axis=1)                    # (Q, L)
+        tt = jnp.clip(s.t, 1, L)
+        is_t = pass_l & (rank == tt[:, None])
+        d_t = jnp.where(is_t, s.dists, -INF).max(axis=1)
+        d_t = jnp.where(rank[:, -1] >= tt, d_t, INF)
+        # inf anchor (fewer than T passing): rerank every passing candidate
+        # — guarded, since beta == 1.0 would turn inf + 0*inf into NaN and
+        # silently drop all results
+        thr = jnp.where(jnp.isinf(d_t), INF,
+                        d_t + (cfg.beta - 1.0) * jnp.abs(d_t))
     if use_pq and cfg.rerank:
-        need = valid & (s.dists <= thr[:, None]) & jnp.isinf(s.acc)
+        need = pass_l & (s.dists <= thr[:, None]) & jnp.isinf(s.acc)
         cand = corpus.base[jnp.maximum(s.ids, 0)]            # (Q, L, D)
         if cfg.use_pallas:
             from repro.kernels import ops
@@ -326,9 +380,13 @@ def search(
         # no rerank (rank by PQ) / accurate traversal (dists are accurate)
         acc = jnp.where(valid, s.dists, INF)
         n_acc = s.n_acc
-    key = jnp.where(valid, acc, INF)
+    key = jnp.where(pass_l, acc, INF)
     neg, idx = jax.lax.top_k(-key, k)
     out_ids = jnp.take_along_axis(s.ids, idx, 1)
+    if node_mask is not None:
+        # a filter can leave fewer than k admissible candidates: such slots
+        # carry +inf keys and must come back as explicit -1 padding
+        out_ids = jnp.where(jnp.isinf(neg), -1, out_ids)
     return SearchResult(
         ids=out_ids, dists=-neg, n_hops=s.n_hops, n_pq=s.n_pq, n_acc=n_acc,
         n_hot_hops=s.n_hot, n_free_pq=s.n_free, rounds=s.rounds,
@@ -351,6 +409,7 @@ def search_reference(
     metric: str = "l2",
     hot_count: int = 0,
     trace: np.ndarray | None = None,
+    node_mask: np.ndarray | None = None,
 ):
     """Single-query Python loop implementation of Algorithm 1 with an exact
     visited set (no Bloom false positives). Returns (ids, dists, counters).
@@ -359,7 +418,10 @@ def search_reference(
     neighbour set in beam order (first occurrence wins) — the same wavefront
     the JAX engine issues, so counters stay comparable at every E.
     If ``trace`` is given, expansion counts are accumulated into it
-    (visit-frequency histogram for graph reordering, §IV-E)."""
+    (visit-frequency histogram for graph reordering, §IV-E).
+    ``node_mask`` mirrors the JAX engine's filtered admission: non-passing
+    nodes route but are excluded from the reranked top-k, the beta-margin
+    anchor (T-th passing candidate) and the returned results."""
     if metric == "angular":
         # same single normalization point as the JAX path (idempotent if the
         # caller already normalized, as build_index's tracing does); base
@@ -385,6 +447,10 @@ def search_reference(
 
     L, k = cfg.list_size, cfg.k
     E = max(int(getattr(cfg, "beam_width", 1)), 1)
+
+    def _pass(u: int) -> bool:
+        return node_mask is None or bool(node_mask[u])
+
     counters = {"hops": 0, "pq": 0, "acc": 0, "hot": 0, "free": 0, "rounds": 0}
     d0 = float(tdist(np.asarray([entry]))[0])
     counters["pq" if cfg.use_pq else "acc"] += 1
@@ -428,7 +494,9 @@ def search_reference(
             lst = lst[:L]
         top_t = lst[: min(t, len(lst))]
         if top_t and all(v2 in evaluated for _, v2 in top_t):
-            ids_t = [v2 for _, v2 in top_t]
+            # only mask-passing candidates are admitted to the reranked
+            # top-k (non-passing ones still route the traversal)
+            ids_t = [v2 for _, v2 in top_t if _pass(v2)]
             fresh = [u for u in ids_t if u not in acc_cache]
             if cfg.use_pq and fresh:
                 for u, du in zip(fresh, adist(np.asarray(fresh))):
@@ -436,7 +504,8 @@ def search_reference(
                 counters["acc"] += len(fresh)
             if not cfg.use_pq:
                 for dd, u in top_t:
-                    acc_cache[u] = dd
+                    if _pass(u):
+                        acc_cache[u] = dd
             topk = tuple(sorted(
                 [u for u in ids_t][: len(ids_t)],
                 key=lambda u: acc_cache[u],
@@ -452,19 +521,31 @@ def search_reference(
             t += t_step
             if t > L:
                 break
-    # final beta rerank
-    t_idx = min(max(t, 1), len(lst)) - 1
-    d_t = lst[t_idx][0]
-    thr = d_t + (cfg.beta - 1.0) * abs(d_t)
+    # final beta rerank (filtered: margin anchored at the T-th PASSING entry)
+    if node_mask is None:
+        t_idx = min(max(t, 1), len(lst)) - 1
+        d_t = lst[t_idx][0]
+        thr = d_t + (cfg.beta - 1.0) * abs(d_t)
+    else:
+        pass_list = [d for d, u in lst if _pass(u)]
+        tt = max(t, 1)
+        d_t = pass_list[tt - 1] if len(pass_list) >= tt else np.inf
+        # same beta==1.0 NaN guard as the JAX engine's masked anchor
+        thr = np.inf if np.isinf(d_t) else d_t + (cfg.beta - 1.0) * abs(d_t)
     if cfg.use_pq and cfg.rerank:
-        need = [u for d, u in lst if d <= thr and u not in acc_cache]
+        need = [u for d, u in lst
+                if d <= thr and _pass(u) and u not in acc_cache]
         if need:
             for u, du in zip(need, adist(np.asarray(need))):
                 acc_cache[u] = float(du)
             counters["acc"] += len(need)
-        scored = sorted(acc_cache.items(), key=lambda kv: kv[1])
+        scored = sorted(
+            ((u, d) for u, d in acc_cache.items() if _pass(u)),
+            key=lambda kv: kv[1],
+        )
     else:
-        scored = sorted(((u, d) for d, u in lst), key=lambda kv: kv[1])
+        scored = sorted(((u, d) for d, u in lst if _pass(u)),
+                        key=lambda kv: kv[1])
     ids = np.asarray([u for u, _ in scored[:k]], dtype=np.int32)
     ds = np.asarray([d for _, d in scored[:k]], dtype=np.float32)
     if len(ids) < k:

@@ -1,0 +1,210 @@
+"""Selectivity-adaptive filtered search.
+
+The estimator (exact — the mask is one host-side vectorized pass) routes a
+filtered query batch to one of three regimes:
+
+  * **empty** — zero passing nodes: return -1/+inf immediately, no device
+    dispatch (the zero-pass short circuit the shard layer also applies per
+    tile).
+  * **scan** (selectivity <= ``FilterConfig.brute_force_selectivity``, or
+    fewer passing nodes than ``k``) — bitmap-driven brute-force PQ scan over
+    the passing subset: gather the passing rows' PQ codes, one ADT-lookup
+    distance pass, exact-rerank the top ``scan_rerank * k``, top-k. The
+    passing-id list is padded to the next power of two so distinct filters
+    share compiled buckets.
+  * **traversal** — masked graph traversal (``core.search(node_mask=...)``):
+    the full graph routes, only passing nodes are admitted; the effective
+    ``list_size`` is inflated by ~1/selectivity (pow2-quantized, capped at
+    ``inflate_cap``) with ``t_step`` scaled to match, and early termination
+    is relaxed by ``relax_repetition`` extra stable rounds. An all-pass
+    filter leaves the config untouched, so its results are bit-identical to
+    the unfiltered search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FilterConfig, SearchConfig
+from repro.core.pq import compute_adt, pq_distance
+from repro.core.search import (
+    Corpus, SearchResult, _exact_dist, empty_search_result, l2_normalize,
+    next_pow2, search,
+)
+
+INF = jnp.float32(jnp.inf)
+
+
+class FilteredSearchResult(NamedTuple):
+    ids: np.ndarray             # (Q, k) int32 passing ids only, -1 padded
+    dists: np.ndarray           # (Q, k) f32 accurate distances, +inf padded
+    result: SearchResult        # counters (scan mode: synthesized — hops=0,
+                                # pq = passing-subset size, rounds=1)
+    mode: str                   # "traversal" | "scan" | "empty"
+    selectivity: float          # exact passing fraction of the mask
+    effective: SearchConfig     # the adapted config actually executed
+
+
+def adapt_search_cfg(
+    cfg: SearchConfig,
+    selectivity: float,
+    filter_cfg: FilterConfig,
+) -> SearchConfig:
+    """Masked-traversal config for a given selectivity: the candidate list
+    must hold ~1/selectivity non-passing entries per admitted one, so the
+    frontier inflates accordingly (pow2-quantized to bound the set of
+    compiled shapes) and termination is relaxed. selectivity >= 1 returns
+    ``cfg`` unchanged (the all-pass bit-identity guarantee)."""
+    if selectivity >= 1.0:
+        return cfg
+    want = min(1.0 / max(selectivity, 1e-9), float(filter_cfg.inflate_cap))
+    inflate = next_pow2(int(np.ceil(want)))
+    return dataclasses.replace(
+        cfg,
+        list_size=cfg.list_size * inflate,
+        t_step=cfg.t_step * inflate,
+        repetition_rate=cfg.repetition_rate + filter_cfg.relax_repetition,
+    )
+
+
+def tile_node_masks(tile_ids, mask: np.ndarray) -> np.ndarray:
+    """Slice a global pass mask into per-tile local masks: (P, Nt) bool over
+    ``TiledCorpus.tile_ids`` (padding rows never pass). The per-channel
+    bitmap slices of the shard layer — a tile whose slice is all-False can
+    skip the query entirely (zero-pass tile skipping)."""
+    tid = np.asarray(tile_ids)
+    m = np.asarray(mask, bool)
+    return (tid >= 0) & m[np.clip(tid, 0, None)]
+
+
+# ---------------------------------------------------------------------------
+# Brute-force PQ scan over the passing subset
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "m_rerank", "metric", "use_pq"))
+def _scan_kernel(corpus: Corpus, queries, sel_ids, sel_valid,
+                 k: int, m_rerank: int, metric: str, use_pq: bool):
+    """One batched pass over the gathered passing rows. sel_ids (S,) int32
+    (pow2-padded), sel_valid (S,) bool. Returns (ids, dists, n_acc_each)."""
+    if metric == "angular":
+        queries = l2_normalize(queries)
+    base_sel = corpus.base[sel_ids]                     # (S, D)
+    if use_pq:
+        adts = jax.vmap(
+            lambda q: compute_adt(q, corpus.centroids, metric)
+        )(queries)
+        codes_sel = corpus.codes[sel_ids]               # (S, M)
+        d = jax.vmap(lambda adt: pq_distance(codes_sel, adt))(adts)
+        d = jnp.where(sel_valid[None, :], d, INF)       # (Q, S)
+        m = min(m_rerank, d.shape[1])
+        negd, idx = jax.lax.top_k(-d, m)                # (Q, m) PQ short-list
+        cand = base_sel[idx]                            # (Q, m, D)
+        acc = jax.vmap(lambda q, x: _exact_dist(q, x, metric))(queries, cand)
+        acc = jnp.where(jnp.isinf(negd), INF, acc)      # padded lanes stay inf
+        neg2, idx2 = jax.lax.top_k(-acc, min(k, m))
+        out_ids = jnp.take_along_axis(sel_ids[idx], idx2, 1)
+        out_d = -neg2
+        n_acc_each = jnp.isfinite(negd).sum(axis=1)
+    else:
+        d = jax.vmap(lambda q: _exact_dist(q, base_sel, metric))(queries)
+        d = jnp.where(sel_valid[None, :], d, INF)
+        neg2, idx2 = jax.lax.top_k(-d, min(k, d.shape[1]))
+        out_ids = sel_ids[idx2]
+        out_d = -neg2
+        n_acc_each = sel_valid.sum()[None].repeat(queries.shape[0])
+    out_ids = jnp.where(jnp.isinf(out_d), -1, out_ids)
+    return out_ids, out_d, n_acc_each
+
+
+def _pad_topk(ids: np.ndarray, dists: np.ndarray, k: int):
+    got = ids.shape[1]
+    if got >= k:
+        return ids[:, :k], dists[:, :k]
+    q = ids.shape[0]
+    pid = np.full((q, k), -1, np.int32)
+    pd = np.full((q, k), np.inf, np.float32)
+    pid[:, :got] = ids
+    pd[:, :got] = dists
+    return pid, pd
+
+
+def _zero_counters(nq: int):
+    z = jnp.zeros((nq,), jnp.int32)
+    return dict(n_hops=z, n_pq=z, n_acc=z, n_hot_hops=z, n_free_pq=z,
+                rounds=z)
+
+
+def _scan(corpus: Corpus, queries: jnp.ndarray, mask: np.ndarray,
+          cfg: SearchConfig, metric: str, fcfg: FilterConfig,
+          selectivity: float) -> FilteredSearchResult:
+    pass_ids = np.nonzero(mask)[0].astype(np.int32)
+    pot = next_pow2(len(pass_ids))
+    sel_ids = np.zeros((pot,), np.int32)
+    sel_ids[: len(pass_ids)] = pass_ids
+    sel_valid = np.zeros((pot,), bool)
+    sel_valid[: len(pass_ids)] = True
+    m_rerank = next_pow2(max(fcfg.scan_rerank * cfg.k, cfg.k))
+    use_pq = cfg.use_pq and cfg.rerank  # rank-by-PQ degenerates to exact scan
+    ids, dists, n_acc = _scan_kernel(
+        corpus, queries, jnp.asarray(sel_ids), jnp.asarray(sel_valid),
+        cfg.k, m_rerank, metric, use_pq,
+    )
+    nq = queries.shape[0]
+    ids, dists = _pad_topk(np.asarray(ids), np.asarray(dists), cfg.k)
+    counters = _zero_counters(nq)
+    counters["n_pq"] = jnp.full((nq,), len(pass_ids) if use_pq else 0,
+                                jnp.int32)
+    counters["n_acc"] = jnp.asarray(n_acc, jnp.int32) if use_pq else \
+        jnp.full((nq,), len(pass_ids), jnp.int32)
+    counters["rounds"] = jnp.ones((nq,), jnp.int32)
+    res = SearchResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+                       **counters)
+    return FilteredSearchResult(ids=ids, dists=dists, result=res,
+                                mode="scan", selectivity=selectivity,
+                                effective=cfg)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def filtered_search(
+    corpus: Corpus,
+    queries,
+    mask: np.ndarray,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    filter_cfg: Optional[FilterConfig] = None,
+) -> FilteredSearchResult:
+    """Filtered Proxima search over a device corpus. ``mask`` is the
+    compiled (N,) pass mask (``AttributeStore.mask(spec)``); regime choice
+    per the module docstring."""
+    fcfg = filter_cfg or FilterConfig()
+    queries = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+    mask_np = np.asarray(mask, bool)
+    n = mask_np.size
+    n_pass = int(mask_np.sum())
+    sel = n_pass / max(n, 1)
+    nq = queries.shape[0]
+
+    if n_pass == 0:
+        res = empty_search_result(nq, cfg.k)
+        return FilteredSearchResult(
+            ids=np.asarray(res.ids), dists=np.asarray(res.dists),
+            result=res, mode="empty", selectivity=0.0, effective=cfg,
+        )
+    if sel <= fcfg.brute_force_selectivity or n_pass <= cfg.k:
+        return _scan(corpus, queries, mask_np, cfg, metric, fcfg, sel)
+
+    eff = adapt_search_cfg(cfg, sel, fcfg)
+    res = search(corpus, queries, eff, metric,
+                 node_mask=jnp.asarray(mask_np))
+    return FilteredSearchResult(
+        ids=np.asarray(res.ids), dists=np.asarray(res.dists), result=res,
+        mode="traversal", selectivity=sel, effective=eff,
+    )

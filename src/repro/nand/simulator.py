@@ -39,6 +39,12 @@ class WorkloadTrace:
     raw_bytes: int = 512        # D x fp32
     metric: str = "l2"
     use_pq: bool = True
+    # --- filtered-query billing (repro.filter) -----------------------------
+    attr_bits: int = 0          # per-node attribute word (page spare area)
+    filter_mode: str = "off"    # off | pushdown | host — where the
+                                # predicate is evaluated (see
+                                # _accesses_per_query for the billing split)
+    filter_selectivity: float = 1.0  # passing fraction of scored candidates
 
 
 def logical_insert_bytes(dim: int, pq_bits: int, r_degree: int,
@@ -96,9 +102,20 @@ class SimResult:
     core_utilization: float
     breakdown: Dict[str, float]          # fractional runtime shares
     traffic_bytes_per_query: Dict[str, float]
+    transfer_pj_per_query: float = 0.0   # H-tree channel-transfer energy —
+                                         # the quantity predicate pushdown
+                                         # shrinks vs host-side filtering
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+def _transfer_pj(traffic: Dict[str, float], nand: NandConfig) -> float:
+    """Channel-transfer energy of the per-query H-tree traffic (continuous
+    window billing — strictly monotone in bytes, so a strict byte saving is
+    a strict energy saving)."""
+    per_window = nand.e_core_htree_pj + nand.e_tile_htree_pj
+    return sum(traffic.values()) / nand.page_bytes * per_window
 
 
 def _accesses_per_query(t: WorkloadTrace, nand: NandConfig):
@@ -106,31 +123,62 @@ def _accesses_per_query(t: WorkloadTrace, nand: NandConfig):
 
     Each access = one WL activation; extra bytes beyond the MUX window add
     transfer time only (device.access_latency_ns). Hot hops read the
-    co-located index+codes record in a single activation (§IV-E)."""
+    co-located index+codes record in a single activation (§IV-E).
+
+    Filtered queries split by where the predicate runs:
+
+      * ``pushdown`` — each neighbour's attribute word sits in the spare
+        area of the adjacency page, so the expansion's WL activation
+        already returns it (extra transfer bytes, no extra activation);
+        the tile drops non-passing candidates BEFORE channel transfer, so
+        only ``filter_selectivity`` of the candidate stream crosses the
+        H-tree.
+      * ``host`` — attribute words ride with the candidate's PQ record and
+        every candidate (plus its attribute word) crosses the channel for
+        host-side evaluation: the ``attrs`` traffic category is the
+        pushdown path's saving.
+    """
     cold_hops = max(t.hops - t.hot_hops, 0.0)
-    idx_bytes_each = t.r_degree * t.index_bits / 8.0
-    hot_bytes_each = (t.r_degree * (t.index_bits + t.pq_bits) + t.pq_bits) / 8.0
+    attr_each = t.attr_bits / 8.0 if t.filter_mode != "off" else 0.0
+    idx_xfer_each = t.r_degree * t.index_bits / 8.0
+    hot_xfer_each = (t.r_degree * (t.index_bits + t.pq_bits) + t.pq_bits) / 8.0
     cold_pq = max(t.pq - t.free_pq, 0.0)
-    pq_bytes_each = t.pq_bits / 8.0
+    pq_xfer_each = t.pq_bits / 8.0
+    # bytes READ from the array per activation may exceed bytes that cross
+    # the channel: pushdown consumes the spare-area attr words in-tile
+    idx_read_each, hot_read_each, pq_read_each = \
+        idx_xfer_each, hot_xfer_each, pq_xfer_each
+    if t.filter_mode == "pushdown":
+        # spare-area co-location: R neighbour attr words per adjacency read
+        idx_read_each += t.r_degree * attr_each
+        hot_read_each += t.r_degree * attr_each
+    elif t.filter_mode == "host":
+        # attr word rides with the candidate record AND crosses the channel
+        pq_read_each += attr_each
 
     n_access = cold_hops * (1 + cold_pq / max(cold_hops, 1.0)) \
         + t.hot_hops + t.acc
     busy_ns = (
-        cold_hops * nand.access_latency_ns(int(idx_bytes_each))
-        + t.hot_hops * nand.access_latency_ns(int(hot_bytes_each))
-        + cold_pq * nand.access_latency_ns(int(pq_bytes_each))
+        cold_hops * nand.access_latency_ns(int(idx_read_each))
+        + t.hot_hops * nand.access_latency_ns(int(hot_read_each))
+        + cold_pq * nand.access_latency_ns(int(pq_read_each))
         + t.acc * nand.access_latency_ns(t.raw_bytes)
     )
     energy_pj = (
-        cold_hops * nand.access_energy_pj(int(idx_bytes_each))
-        + t.hot_hops * nand.access_energy_pj(int(hot_bytes_each))
-        + cold_pq * nand.access_energy_pj(int(pq_bytes_each))
+        cold_hops * nand.access_energy_pj(int(idx_read_each))
+        + t.hot_hops * nand.access_energy_pj(int(hot_read_each))
+        + cold_pq * nand.access_energy_pj(int(pq_read_each))
         + t.acc * nand.access_energy_pj(t.raw_bytes)
     )
+    pass_frac = (
+        min(max(t.filter_selectivity, 0.0), 1.0)
+        if t.filter_mode == "pushdown" else 1.0
+    )
     traffic = {
-        "index": cold_hops * idx_bytes_each + t.hot_hops * hot_bytes_each,
-        "pq_codes": cold_pq * pq_bytes_each,
+        "index": cold_hops * idx_xfer_each + t.hot_hops * hot_xfer_each,
+        "pq_codes": cold_pq * pq_xfer_each * pass_frac,
         "raw": t.acc * t.raw_bytes,
+        "attrs": cold_pq * attr_each if t.filter_mode == "host" else 0.0,
     }
     return n_access, busy_ns, energy_pj, traffic
 
@@ -277,6 +325,7 @@ def simulate(
             "engine": engine_ns / total,
         },
         traffic_bytes_per_query=traffic,
+        transfer_pj_per_query=_transfer_pj(traffic, nand),
     )
 
 
@@ -319,9 +368,44 @@ def simulate_mixed(
     )
 
 
+def filter_comparison(
+    trace: WorkloadTrace,
+    nand: NandConfig = NandConfig(),
+    eng: EngineConfig = EngineConfig(),
+    n_queues: int | None = None,
+) -> dict:
+    """Near-storage predicate pushdown vs host-side filtering for the SAME
+    measured trace: the pushdown path bills attribute words as spare-area
+    reads co-located with adjacency pages and lets only passing candidates
+    cross the channel; the host path ships every candidate plus its
+    attribute word. Returns both SimResults and the savings ratios.
+    ``trace.attr_bits`` must be set (> 0) for the comparison to bite."""
+    push = simulate(dataclasses.replace(trace, filter_mode="pushdown"),
+                    nand, eng, n_queues=n_queues)
+    host = simulate(dataclasses.replace(trace, filter_mode="host"),
+                    nand, eng, n_queues=n_queues)
+    return {
+        "pushdown": push,
+        "host": host,
+        "transfer_bytes_saved": (
+            sum(host.traffic_bytes_per_query.values())
+            - sum(push.traffic_bytes_per_query.values())
+        ),
+        "transfer_energy_ratio": (
+            push.transfer_pj_per_query / max(host.transfer_pj_per_query, 1e-12)
+        ),
+        "latency_speedup": host.latency_us / max(push.latency_us, 1e-12),
+        "qps_per_watt_gain": (
+            push.qps_per_watt / max(host.qps_per_watt, 1e-12)
+        ),
+    }
+
+
 def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
                              metric="l2", use_pq=True, use_hot=True,
-                             beam_width=None) -> WorkloadTrace:
+                             beam_width=None, attr_bits=0,
+                             filter_mode="off",
+                             filter_selectivity=1.0) -> WorkloadTrace:
     """Average the per-query counters of a core.search SearchResult.
 
     A ``shard.ShardedSearchResult`` is accepted too: its (P, Q) counters are
@@ -332,9 +416,24 @@ def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
     ``beam_width`` defaults to the REALIZED per-round expansion parallelism
     measured from the counters themselves (mean hops / mean rounds — the
     n_hops-vs-rounds separation core.search maintains); pass the configured
-    ``SearchConfig.beam_width`` explicitly to bill the nominal E instead."""
+    ``SearchConfig.beam_width`` explicitly to bill the nominal E instead.
+
+    A ``filter.FilteredSearchResult`` is accepted too (its ``.result``
+    counters are used, and ``filter_selectivity`` defaults to the result's
+    measured selectivity); set ``attr_bits``/``filter_mode`` to bill the
+    predicate evaluation (see ``filter_comparison``)."""
     import numpy as np
 
+    if hasattr(res, "mode") and hasattr(res, "result"):   # FilteredSearchResult
+        if filter_selectivity == 1.0:
+            # traversal mode scores the full frontier, of which only
+            # `selectivity` passes; scan mode's candidate stream is the
+            # passing subset itself — every scored candidate crosses, so
+            # pushdown must not discount it
+            filter_selectivity = (
+                res.selectivity if res.mode == "traversal" else 1.0
+            )
+        res = res.result
     if hasattr(res, "per_tile"):
         res = res.per_tile
         f = lambda x: float(np.asarray(x).sum(0).mean())
@@ -351,16 +450,20 @@ def trace_from_search_result(res, *, dim, r_degree, index_bits, pq_bits,
         dim=dim, r_degree=r_degree,
         index_bits=index_bits, pq_bits=pq_bits, raw_bytes=dim * 4,
         metric=metric, use_pq=use_pq,
+        attr_bits=attr_bits, filter_mode=filter_mode,
+        filter_selectivity=filter_selectivity,
     )
 
 
 def traces_from_sharded_result(res, *, dim, r_degree, index_bits, pq_bits,
                                metric="l2", use_pq=True, use_hot=True,
-                               beam_width=None) -> list[WorkloadTrace]:
+                               beam_width=None, attr_bits=0,
+                               filter_mode="off",
+                               filter_selectivity=1.0) -> list[WorkloadTrace]:
     """Per-tile workload traces from a ``shard.ShardedSearchResult`` — the
     per-tile counter axis maps 1:1 onto NAND channel groups. ``beam_width``
     propagates to every channel trace (None -> realized hops/rounds,
-    measured per tile)."""
+    measured per tile); so do the filter billing knobs."""
     per = res.per_tile if hasattr(res, "per_tile") else res
     num_tiles = per.ids.shape[0]
     return [
@@ -368,7 +471,8 @@ def traces_from_sharded_result(res, *, dim, r_degree, index_bits, pq_bits,
             type(per)(*(f[p] for f in per)),
             dim=dim, r_degree=r_degree, index_bits=index_bits,
             pq_bits=pq_bits, metric=metric, use_pq=use_pq, use_hot=use_hot,
-            beam_width=beam_width,
+            beam_width=beam_width, attr_bits=attr_bits,
+            filter_mode=filter_mode, filter_selectivity=filter_selectivity,
         )
         for p in range(num_tiles)
     ]

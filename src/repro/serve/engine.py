@@ -40,6 +40,10 @@ class Request:
     t_done: float = 0.0
     ids: Optional[np.ndarray] = None
     dists: Optional[np.ndarray] = None
+    # per-request attribute filter (repro.filter.FilterSpec) — requests
+    # sharing a spec (by hash) are batched together so one compiled masked
+    # search serves the whole batch; None = unfiltered
+    filter: Optional[object] = None
 
     @property
     def latency_ms(self) -> float:
@@ -58,6 +62,7 @@ class ServingEngine:
         shard_policy: Optional[str] = None,
         probe_tiles: Optional[int] = None,
         beam_width: Optional[int] = None,
+        attributes=None,
     ):
         self.mutable = index if isinstance(index, MutableIndex) else None
         self._index = index.base if self.mutable else index
@@ -74,7 +79,37 @@ class ServingEngine:
         self.stats = {
             "batches": 0, "queries": 0, "pad_fraction": 0.0,
             "inserts": 0, "deletes": 0, "consolidations": 0,
+            "filtered_queries": 0, "filter_scan_batches": 0,
         }
+        # ----- filtered-search plumbing ------------------------------------
+        # getattr: configs/indexes unpickled from pre-filter-layer caches
+        from repro.configs.base import FilterConfig
+
+        self.filter_cfg = (
+            getattr(self.index.config, "filter", None) or FilterConfig()
+        )
+        if self.mutable is not None:
+            if attributes is not None:
+                if len(attributes) != self.mutable.next_ext:
+                    raise ValueError(
+                        f"attribute store has {len(attributes)} rows, "
+                        f"mutable index has allocated "
+                        f"{self.mutable.next_ext} external ids"
+                    )
+                self.mutable.attributes = attributes
+            self.attributes = self.mutable.attributes
+        else:
+            if attributes is not None and \
+                    len(attributes) != self._index.dataset.num_base:
+                raise ValueError(
+                    f"attribute store has {len(attributes)} rows, index "
+                    f"has {self._index.dataset.num_base} vertices"
+                )
+            self.attributes = (
+                attributes if attributes is not None
+                else getattr(self._index, "attributes", None)
+            )
+        self._filter_cache: Dict[object, dict] = {}  # spec -> mask/cfg/tiles
         # ----- multi-channel (sharded) base path ---------------------------
         # getattr: configs unpickled from pre-shard-layer caches lack .shard
         from repro.configs.base import ShardConfig
@@ -144,42 +179,85 @@ class ServingEngine:
         return self.mutable.base if self.mutable is not None else self._index
 
     # ------------------------------------------------------------- search path
-    def _search_batch(self, q: np.ndarray):
+    def _filter_plan(self, spec) -> dict:
+        """Cached per-spec plan for the frozen-index paths: compiled mask,
+        adapted config, per-tile mask slices (the mutable path recomputes —
+        its mask depends on the live tombstone set)."""
+        plan = self._filter_cache.get(spec)
+        if plan is None:
+            from repro.filter import adapt_search_cfg, tile_node_masks
+
+            if self.attributes is None:
+                raise RuntimeError(
+                    "filtered submit() needs an attribute store — pass "
+                    "attributes= to ServingEngine or attach one to the index"
+                )
+            mask = self.attributes.mask(spec)
+            plan = {"mask": mask, "selectivity": float(mask.mean())}
+            if self.tiled is not None:
+                plan["node_masks"] = tile_node_masks(self.tiled.tile_ids, mask)
+                plan["cfg"] = adapt_search_cfg(
+                    self.cfg, plan["selectivity"], self.filter_cfg
+                )
+            self._filter_cache[spec] = plan
+        return plan
+
+    def _search_batch(self, q: np.ndarray, spec=None):
         """(B, D) -> (ids, dists) through the merged, sharded or static
-        path."""
+        path; ``spec`` routes the batch through the filtered variant."""
         if self.mutable is not None:
             res = search_merged(self.mutable, q, self.cfg,
-                                probe_tiles=self.probe_tiles or None)
+                                probe_tiles=self.probe_tiles or None,
+                                filter_spec=spec)
             return res.ids, res.dists
         if self.tiled is not None:
             from repro.shard import sharded_search
 
+            cfg, node_masks = self.cfg, None
+            if spec is not None:
+                plan = self._filter_plan(spec)
+                cfg, node_masks = plan["cfg"], plan["node_masks"]
             res = sharded_search(
-                self.tiled, q, self.cfg, self.metric,
+                self.tiled, q, cfg, self.metric,
                 probe_tiles=self.probe_tiles or None,
+                node_masks=node_masks,
             )
             jax.block_until_ready(res.ids)
             return np.asarray(res.ids), np.asarray(res.dists)
+        if spec is not None:
+            from repro.filter import filtered_search
+
+            plan = self._filter_plan(spec)
+            fres = filtered_search(self.corpus, q, plan["mask"], self.cfg,
+                                   self.metric, filter_cfg=self.filter_cfg)
+            if fres.mode == "scan":
+                self.stats["filter_scan_batches"] += 1
+            return fres.ids, fres.dists
         res = search(self.corpus, q, self.cfg, self.metric)
         jax.block_until_ready(res.ids)
         return np.asarray(res.ids), np.asarray(res.dists)
 
     # --------------------------------------------------------------- requests
-    def submit(self, query: np.ndarray) -> int:
+    def submit(self, query: np.ndarray, filter=None) -> int:
+        """Queue one query; ``filter`` (a hashable ``FilterSpec``) restricts
+        results to attribute-passing nodes. Requests batch by filter hash."""
         rid = self._next
         self._next += 1
+        if filter is not None and getattr(filter, "is_all", False):
+            filter = None                 # all-pass spec == unfiltered batch
         self.queue.append(Request(rid=rid, query=np.asarray(query, np.float32),
-                                  t_submit=time.time()))
+                                  t_submit=time.time(), filter=filter))
         return rid
 
-    def insert(self, vector: np.ndarray) -> int:
+    def insert(self, vector: np.ndarray, attrs=None) -> int:
         """Streaming insert; returns the stable external id. Visible to every
-        query flushed after this call."""
+        query flushed after this call. ``attrs`` is the new vector's
+        attribute row when the index carries an attribute store."""
         if self.mutable is None:
             raise RuntimeError("engine serves a frozen index — wrap it in "
                                "stream.MutableIndex for online updates")
         before = self.mutable.stats["consolidations"]
-        ext = self.mutable.insert(vector)   # may consolidate on a full delta
+        ext = self.mutable.insert(vector, attrs=attrs)  # may consolidate
         self.stats["consolidations"] += (
             self.mutable.stats["consolidations"] - before
         )
@@ -215,11 +293,23 @@ class ServingEngine:
 
     def step(self, force: bool = False) -> List[Request]:
         """Run one batch if due; returns completed requests. In streaming
-        mode, consolidation triggers between batches."""
+        mode, consolidation triggers between batches.
+
+        Batches are homogeneous in filter: the flush takes the head
+        request's ``FilterSpec`` and gathers (in FIFO order) only requests
+        sharing it — one compiled masked search serves the whole batch.
+        Other-filter requests keep their place at the front of the queue
+        for the next flush. With uniform filters (the common case, and
+        every unfiltered workload) this is plain FIFO batching."""
         if not (force and self.queue) and not self._flush_due():
             return []
-        batch = [self.queue.popleft()
-                 for _ in range(min(self.batch_size, len(self.queue)))]
+        spec = self.queue[0].filter
+        batch: List[Request] = []
+        skipped: List[Request] = []
+        while self.queue and len(batch) < self.batch_size:
+            r = self.queue.popleft()
+            (batch if r.filter == spec else skipped).append(r)
+        self.queue.extendleft(reversed(skipped))
         n = len(batch)
         q = np.stack([r.query for r in batch])
         bucket = self._bucket(n)
@@ -227,8 +317,10 @@ class ServingEngine:
             q = np.concatenate(
                 [q, np.zeros((bucket - n, q.shape[1]), np.float32)]
             )
-        ids, dists = self._search_batch(q)
+        ids, dists = self._search_batch(q, spec)
         now = time.time()
+        if spec is not None:
+            self.stats["filtered_queries"] += n
         for i, r in enumerate(batch):
             r.ids, r.dists, r.t_done = ids[i], dists[i], now
             self.done[r.rid] = r

@@ -26,7 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SearchConfig
-from repro.core.search import Corpus, SearchResult, next_pow2, search
+from repro.core.search import (
+    Corpus, SearchResult, empty_search_result, next_pow2, search,
+)
 from repro.shard.partition import TiledCorpus
 
 
@@ -79,14 +81,18 @@ def cross_tile_merge(
 
 
 def _fan_out(tiled: TiledCorpus, queries, cfg: SearchConfig, metric: str,
-             use_vmap: bool) -> SearchResult:
-    """Run ``search`` on every tile; results get a leading (P,) axis."""
+             use_vmap: bool, node_masks=None) -> SearchResult:
+    """Run ``search`` on every tile; results get a leading (P,) axis.
+    ``node_masks`` (P, Nt) bool — the filter subsystem's per-tile bitmap
+    slices: each tile admits only its passing vertices, and a tile whose
+    slice is all-False is skipped outright (zero-pass tile skipping: the
+    channel never sees the query)."""
     corpus = Corpus(
         adjacency=tiled.adjacency, codes=tiled.codes, base=tiled.base,
         centroids=tiled.centroids, entry_point=tiled.entry_points,
         hot_count=tiled.hot_counts,
     )
-    if use_vmap:
+    if use_vmap and node_masks is None:
         axes = Corpus(adjacency=0, codes=0, base=0, centroids=None,
                       entry_point=0, hot_count=0)
         return jax.vmap(
@@ -95,9 +101,15 @@ def _fan_out(tiled: TiledCorpus, queries, cfg: SearchConfig, metric: str,
     # unrolled fan-out: identical shapes across tiles -> one compiled
     # executable reused P times, and tiles early-terminate independently
     # (the vmapped while_loop cannot; Pallas kernels also skip the extra
-    # batching axis this way)
-    per = [
-        search(
+    # batching axis this way). Masked fan-out is always unrolled — that is
+    # what makes the per-tile zero-pass skip a host-side decision.
+    per = []
+    for p in range(tiled.num_tiles):
+        mask_p = None if node_masks is None else np.asarray(node_masks[p])
+        if mask_p is not None and not mask_p.any():
+            per.append(empty_search_result(queries.shape[0], cfg.k))
+            continue
+        per.append(search(
             Corpus(
                 adjacency=tiled.adjacency[p], codes=tiled.codes[p],
                 base=tiled.base[p], centroids=tiled.centroids,
@@ -105,9 +117,8 @@ def _fan_out(tiled: TiledCorpus, queries, cfg: SearchConfig, metric: str,
                 hot_count=tiled.hot_counts[p],
             ),
             queries, cfg, metric,
-        )
-        for p in range(tiled.num_tiles)
-    ]
+            node_mask=None if mask_p is None else jnp.asarray(mask_p),
+        ))
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
 
 
@@ -144,6 +155,7 @@ def sharded_search(
     metric: str = "l2",
     use_vmap: bool | None = None,
     probe_tiles: int | None = None,
+    node_masks=None,
 ) -> ShardedSearchResult:
     """Channel-parallel Proxima search: fan out over tiles, merge top-k.
 
@@ -156,11 +168,17 @@ def sharded_search(
     candidates are masked from the merge and their counters are zeroed for
     that query). Full fan-out (None or 0) trades total work for recall;
     routed probing is what lets throughput scale with the channel count.
+
+    ``node_masks`` (P, Nt) bool — filtered search: per-tile slices of a
+    global pass mask (``filter.tile_node_masks``). Tiles whose slice has no
+    passing vertex are skipped entirely (zero-pass tile skipping) and
+    excluded from the merge like unprobed channels.
     """
     queries = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
     if use_vmap is None:
         use_vmap = not cfg.use_pallas
-    per = _fan_out(tiled, queries, cfg, metric, use_vmap)
+    per = _fan_out(tiled, queries, cfg, metric, use_vmap,
+                   node_masks=node_masks)
     nt = tiled.num_tiles
     # probe_tiles in {None, 0} -> full fan-out (0 is ShardConfig's default
     # "routing off" value, so config values can be passed straight through)
@@ -176,6 +194,12 @@ def sharded_search(
         per = per._replace(**zeroed)
     else:
         probed = jnp.ones((nt, queries.shape[0]), bool)
+    if node_masks is not None:
+        # zero-pass channels served nothing (their counters are already
+        # zero); mark them unprobed so the merge treats them like skipped
+        # lanes
+        active = jnp.asarray(np.asarray(node_masks, bool).any(axis=1))
+        probed = probed & active[:, None]
 
     # tile-local -> global ids (pads and invalid lanes -> -1)
     gids = jax.vmap(

@@ -27,10 +27,25 @@ from repro.stream.delta import DeltaSegment
 
 
 class MutableIndex:
-    def __init__(self, index: ProximaIndex, stream_cfg: Optional[StreamConfig] = None):
+    def __init__(self, index: ProximaIndex, stream_cfg: Optional[StreamConfig] = None,
+                 attributes=None):
         self.base = index
         self.stream_cfg = stream_cfg or index.config.stream
         n = index.dataset.num_base
+        # filtered-search attributes, keyed by STABLE EXTERNAL id (row e =
+        # attrs of ext id e) so they survive consolidation's internal-id
+        # reshuffle untouched. At construction ext ids 0..N-1 coincide with
+        # the base index's internal ids, so a store attached to the built
+        # index seeds the table directly.
+        self.attributes = (
+            attributes if attributes is not None
+            else getattr(index, "attributes", None)
+        )
+        if self.attributes is not None and len(self.attributes) != n:
+            raise ValueError(
+                f"attribute store has {len(self.attributes)} rows, base "
+                f"corpus has {n}"
+            )
         self.ext_base = np.arange(n, dtype=np.int64)   # base internal -> ext
         self.next_ext = n
         self.delta_ext: list[int] = []                 # delta local -> ext
@@ -137,8 +152,37 @@ class MutableIndex:
             vecs.append(self._delta.vecs[: len(self._delta)][alive])
         return np.concatenate(ids), np.concatenate(vecs).astype(np.float32)
 
+    # ---------------------------------------------------------------- filter
+    def filter_masks(self, spec) -> tuple[np.ndarray, np.ndarray]:
+        """(base_mask, ext_mask) for a ``FilterSpec``: ``ext_mask`` over all
+        external ids ever allocated, ``base_mask`` the combined
+        filter ∧ ¬tombstone admission mask over the CURRENT base index's
+        internal ids (what the masked base traversal consumes)."""
+        if self.attributes is None:
+            raise RuntimeError(
+                "index has no attribute store — pass attributes= to "
+                "MutableIndex (or attach one to the base ProximaIndex) "
+                "before filtered search"
+            )
+        ext_mask = self.attributes.mask(spec)           # (next_ext,)
+        base_mask = ext_mask[self.ext_base] & ~self.tombstone_mask(self.ext_base)
+        return base_mask, ext_mask
+
     # -------------------------------------------------------------- mutation
-    def insert(self, vec: np.ndarray) -> int:
+    def insert(self, vec: np.ndarray, attrs=None) -> int:
+        """Insert a vector (and, when the index carries an attribute store,
+        its attribute row — required so filters stay total over the live
+        corpus)."""
+        attr_row = None
+        if self.attributes is not None:
+            if attrs is None:
+                raise ValueError(
+                    "index carries an attribute store; insert(vec, "
+                    "attrs=...) must provide the new vector's attributes"
+                )
+            # validate BEFORE any mutation: a malformed row must not leave
+            # a live vector without its attribute entry
+            attr_row = self.attributes.coerce_row(attrs)
         if self._delta.full:
             self.consolidate()
         self._delta.insert(vec)
@@ -146,6 +190,9 @@ class MutableIndex:
         self.next_ext += 1
         self.delta_ext.append(ext)
         self._delta_set.add(ext)
+        if attr_row is not None:
+            row = self.attributes.append(attr_row)
+            assert row == ext, "attribute rows must track external ids"
         self.stats["inserts"] += 1
         self.stats["logical_bytes"] += self._delta.logical_bytes_per_insert()
         return ext
@@ -218,7 +265,7 @@ class MutableIndex:
         return (logical + self.stats["consolidation_bytes"]) / logical
 
     # ---------------------------------------------------------------- search
-    def search(self, queries: np.ndarray, cfg=None):
+    def search(self, queries: np.ndarray, cfg=None, filter_spec=None):
         from repro.stream.searcher import search_merged
 
-        return search_merged(self, queries, cfg)
+        return search_merged(self, queries, cfg, filter_spec=filter_spec)

@@ -14,6 +14,13 @@ runs channel-parallel (``shard.sharded_search`` over per-tile graphs, with
 its own cross-tile merge); the delta segment ALWAYS stays a single global
 structure — it models the DRAM-resident write buffer in front of the NAND
 channels, not NAND-resident data.
+
+Filtered queries (``filter_spec``): the base traversal runs under the
+COMBINED filter ∧ ¬tombstone admission mask (``MutableIndex.filter_masks``)
+— selectivity-adaptive on the single-tile path (masked traversal or bitmap
+PQ scan), per-tile mask slices with zero-pass tile skipping on the tiled
+path — and delta candidates are filtered by the same ext-id mask alongside
+the tombstone check before the cross-segment merge.
 """
 from __future__ import annotations
 
@@ -22,7 +29,7 @@ from typing import NamedTuple, Optional, Union
 
 import numpy as np
 
-from repro.configs.base import SearchConfig
+from repro.configs.base import FilterConfig, SearchConfig
 from repro.core.search import SearchResult, search
 
 
@@ -41,11 +48,17 @@ def search_merged(
     queries: np.ndarray,
     cfg: Optional[SearchConfig] = None,
     probe_tiles: Optional[int] = None,
+    filter_spec=None,
 ) -> MergedResult:
     cfg = cfg or mutable.base.config.search
     k = cfg.k
     k_base = min(cfg.list_size, k + mutable.stream_cfg.base_overfetch)
     base_cfg = dataclasses.replace(cfg, k=k_base) if k_base != k else cfg
+
+    base_mask = ext_mask = None
+    if filter_spec is not None and not getattr(filter_spec, "is_all", False):
+        base_mask, ext_mask = mutable.filter_masks(filter_spec)
+    fcfg = getattr(mutable.base.config, "filter", None) or FilterConfig()
 
     q = np.atleast_2d(np.asarray(queries, np.float32))
     if getattr(mutable, "num_tiles", 1) > 1:
@@ -54,8 +67,24 @@ def search_merged(
         # tiled base: per-tile ids come back already mapped to the base
         # index's global (reordered-internal) id space, so the external-id
         # and tombstone plumbing below is identical to the single-tile path
-        res = sharded_search(mutable.tiled_corpus(), q, base_cfg,
-                             mutable.metric, probe_tiles=probe_tiles)
+        node_masks = None
+        tiled = mutable.tiled_corpus()
+        tiled_cfg = base_cfg
+        if base_mask is not None:
+            from repro.filter import adapt_search_cfg, tile_node_masks
+
+            node_masks = tile_node_masks(tiled.tile_ids, base_mask)
+            tiled_cfg = adapt_search_cfg(
+                base_cfg, float(base_mask.mean()), fcfg
+            )
+        res = sharded_search(tiled, q, tiled_cfg, mutable.metric,
+                             probe_tiles=probe_tiles, node_masks=node_masks)
+    elif base_mask is not None:
+        from repro.filter import filtered_search
+
+        # selectivity-adaptive base path (masked traversal / bitmap PQ scan)
+        res = filtered_search(mutable.corpus(), q, base_mask, base_cfg,
+                              mutable.metric, filter_cfg=fcfg).result
     else:
         res = search(mutable.corpus(), q, base_cfg, mutable.metric)
     base_ids = np.asarray(res.ids)                    # (Q, k_base) internal
@@ -65,6 +94,11 @@ def search_merged(
     ext = mutable.ext_base[np.clip(base_ids, 0, None)]  # (Q, k_base)
     dead = mutable.tombstone_mask(ext)
     keep = valid & ~dead
+    if ext_mask is not None:
+        # belt-and-braces: the traversal already admitted only passing
+        # nodes, but the combined filter ∧ tombstone mask is re-applied on
+        # external ids so the merge invariant holds by construction
+        keep &= ext_mask[np.clip(ext, 0, None)]
     base_d = np.where(keep, base_d, np.inf)
     ext = np.where(keep, ext, -1)
 
@@ -84,6 +118,10 @@ def search_merged(
             dl_ids >= 0, delta_ext[np.clip(dl_ids, 0, None)], -1
         )
         alive = (dl_ids >= 0) & ~mutable.tombstone_mask(dl_ext)
+        if ext_mask is not None:
+            # same combined mask on the delta stream: deleted OR
+            # non-passing delta vectors must not reach the merge
+            alive &= ext_mask[np.clip(dl_ext, 0, None)]
         n_delta = (dl_ids >= 0).sum(1).astype(np.int32)
         cand_ids = np.concatenate(
             [cand_ids, np.where(alive, dl_ext, -1)], axis=1
