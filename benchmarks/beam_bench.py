@@ -22,15 +22,15 @@ edge. The sweep reports, per E:
 from __future__ import annotations
 
 import argparse
-import dataclasses as dc
 
 import numpy as np
 
 from benchmarks.common import get_index
 from repro.configs.base import SearchConfig
-from repro.core import recall_at_k, search
+from repro.core import recall_at_k
 from repro.core.dataset import exact_knn
-from repro.nand.simulator import simulate, trace_from_search_result
+from repro.nand.simulator import simulate, trace_from_plan_execution
+from repro.plan import Searcher, SearchRequest
 
 
 def main(out=print, smoke: bool = False) -> None:
@@ -42,21 +42,21 @@ def main(out=print, smoke: bool = False) -> None:
     gt = idx.dataset.gt
     if gt.shape[1] < 10:
         gt = exact_knn(q, idx.dataset.base, 10, metric)
-    trace_kw = dict(
-        dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
-        index_bits=idx.gap.bit_width if idx.gap else 32,
-        pq_bits=idx.codebook.num_subvectors * 8, metric=metric,
-    )
+    searcher = Searcher.open(idx, cfg=base_cfg)
 
     widths = (1, 4) if smoke else (1, 2, 4, 8)
     rec1 = rounds1 = qps1 = None
     for e in widths:
-        cfg = dc.replace(base_cfg, beam_width=e)
-        res = search(idx.corpus(), q, cfg, metric)
-        rec = recall_at_k(np.asarray(res.ids), gt, 10)
-        rounds = float(np.asarray(res.rounds).mean())
-        hops = float(np.asarray(res.n_hops).mean())
-        sim = simulate(trace_from_search_result(res, **trace_kw))
+        res = searcher.search(SearchRequest(
+            queries=q, overrides={"beam_width": e}))
+        # planner regressions fail loudly: the plan must carry the
+        # requested beam on the flat spine
+        assert res.plan.kind == "flat" and res.plan.cfg.beam_width == e, \
+            f"planner compiled {res.plan.kind}/E={res.plan.cfg.beam_width}"
+        rec = recall_at_k(res.ids, gt, 10)
+        rounds = res.stats.rounds
+        hops = res.stats.hops
+        sim = simulate(trace_from_plan_execution(res, index=idx))
         if rec1 is None:
             rec1, rounds1, qps1 = rec, rounds, sim.qps
         out(f"beam/E{e},{sim.latency_us:.1f},"

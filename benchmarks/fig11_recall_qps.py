@@ -16,7 +16,7 @@ import numpy as np
 
 from benchmarks.common import DATASETS, get_index, proxima_config
 from repro.configs.base import PQConfig, SearchConfig
-from repro.core import recall_at_k, search
+from repro.core import recall_at_k, graph_search as search
 from repro.core.ivf import build_ivf, search_ivf
 
 

@@ -16,7 +16,7 @@ import numpy as np
 
 from benchmarks.common import get_index
 from repro.configs.base import SearchConfig
-from repro.core import search
+from repro.core import graph_search as search
 from repro.nand.simulator import simulate, trace_from_search_result
 
 # paper-reported reference points (order-of-magnitude anchors, SIFT-class)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 from benchmarks.common import get_index
 from repro.configs.base import SearchConfig
-from repro.core import search
+from repro.core import graph_search as search
 from repro.nand.simulator import simulate, trace_from_search_result
 
 

@@ -12,7 +12,7 @@ import numpy as np
 
 from benchmarks.common import get_index
 from repro.configs.base import SearchConfig
-from repro.core import recall_at_k, search
+from repro.core import recall_at_k, graph_search as search
 from repro.core.search import Corpus
 import jax.numpy as jnp
 

@@ -27,13 +27,12 @@ import argparse
 import numpy as np
 
 from benchmarks.common import get_index
-from repro.configs.base import FilterConfig, SearchConfig
+from repro.configs.base import SearchConfig
 from repro.core import recall_at_k
 from repro.core.dataset import exact_knn
-from repro.filter import (
-    FilterSpec, attach_attributes, filtered_search, random_attributes,
-)
-from repro.nand.simulator import filter_comparison, trace_from_search_result
+from repro.filter import FilterSpec, attach_attributes, random_attributes
+from repro.nand.simulator import filter_comparison, trace_from_plan_execution
+from repro.plan import Searcher, SearchRequest
 
 SELECTIVITIES = (0.5, 0.1, 0.01, 0.001)
 PRICE_CARD = 1000   # "price" uniform in [0, 1000): Range(0, s*1000-1) ~ s
@@ -48,15 +47,9 @@ def main(out=print, smoke: bool = False) -> None:
     )
     cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
                        repetition_rate=3, beta=1.06)
-    fcfg = FilterConfig()
     q = idx.dataset.queries
     metric = idx.dataset.metric
-    trace_kw = dict(
-        dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
-        index_bits=idx.gap.bit_width if idx.gap else 32,
-        pq_bits=idx.codebook.num_subvectors * 8, metric=metric,
-        attr_bits=store.attr_bits,
-    )
+    searcher = Searcher.open(idx, cfg=cfg)
 
     sweep = (0.5, 0.01) if smoke else SELECTIVITIES
     for s in sweep:
@@ -67,16 +60,22 @@ def main(out=print, smoke: bool = False) -> None:
         if n_pass == 0:
             out(f"filtered/s{s},0.0,EMPTY;n_pass=0")
             continue
-        fres = filtered_search(idx.corpus(), q, mask, cfg, metric,
-                               filter_cfg=fcfg)
+        pres = searcher.search(SearchRequest(queries=q, filter=spec))
+        fres = pres.raw
+        # planner regressions fail loudly: sharp filters MUST take the
+        # bitmap-scan strategy, moderate ones the masked traversal
+        expect = "scan" if s <= 0.02 else "masked"
+        assert pres.plan.strategy == expect, (
+            f"planner chose {pres.plan.strategy!r} at selectivity {s} "
+            f"(expected {expect!r})")
 
         # filtered brute-force oracle: exact kNN over the passing subset
         pids = np.nonzero(mask)[0]
         k_eff = min(cfg.k, n_pass)
         gt = pids[exact_knn(q, idx.dataset.base[pids], k_eff, metric)]
-        rec = recall_at_k(fres.ids, gt, k_eff)
+        rec = recall_at_k(pres.ids, gt, k_eff)
 
-        trace = trace_from_search_result(fres, **trace_kw)
+        trace = trace_from_plan_execution(pres, index=idx)
         cmpres = filter_comparison(trace)
         push, host = cmpres["pushdown"], cmpres["host"]
         out(f"filtered/s{s},{push.latency_us:.1f},"

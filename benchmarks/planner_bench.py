@@ -1,0 +1,88 @@
+"""Query-plan layer overhead — plan-cache hit rate + dispatch cost.
+
+The redesign's serving-path tax is one ``QueryPlanner.plan`` lookup per
+submit and one plan-keyed dispatch per flush; both must be noise against a
+compiled batch search.  This bench serves a mixed workload (unfiltered +
+two repeated ``FilterSpec``s, the shape the plan cache is built for) and
+reports:
+
+  * plan-cache hit rate (misses == distinct request shapes only),
+  * mean ``plan()`` dispatch overhead per query, absolute and as a share of
+    the measured batch search latency — acceptance bar: **< 5%** (asserted,
+    so a planner regression fails the bench-smoke CI job loudly).
+
+``--smoke`` shrinks the request count for CI.
+
+    PYTHONPATH=src python -m benchmarks.planner_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import get_index
+from repro.configs.base import SearchConfig
+from repro.filter import FilterSpec, attach_attributes, random_attributes
+from repro.plan import Searcher, SearchRequest
+
+PRICE_CARD = 1000
+
+
+def main(out=print, smoke: bool = False) -> None:
+    idx = get_index("sift-like")
+    store = attach_attributes(
+        idx, random_attributes(idx.dataset.num_base,
+                               {"category": 16, "price": PRICE_CARD},
+                               seed=11))
+    cfg = SearchConfig(k=10, list_size=128, t_init=16, t_step=8,
+                       repetition_rate=3, beta=1.06)
+    searcher = Searcher.open(idx, cfg=cfg)
+    q = idx.dataset.queries
+    specs = [None,
+             FilterSpec.range("price", 0, 499),          # masked regime
+             FilterSpec.range("price", 0, 9)]            # scan regime
+    requests = [SearchRequest(queries=q, filter=specs[i % len(specs)])
+                for i in range(60 if smoke else 300)]
+
+    # ---- batch search latency (the denominator), per strategy warm --------
+    for r in requests[:3]:
+        searcher.search(r)                               # warm compiles
+    t0 = time.time()
+    reps = 3 if smoke else 6
+    for _ in range(reps):
+        for r in requests[:3]:
+            searcher.search(r)
+    batch_s = (time.time() - t0) / (3 * reps)
+
+    # ---- plan dispatch cost ------------------------------------------------
+    h0 = searcher.plan_cache_stats()
+    t0 = time.time()
+    for r in requests:
+        searcher.plan(r)
+    plan_s = (time.time() - t0) / len(requests)
+    h1 = searcher.plan_cache_stats()
+    hits = h1["plan_cache_hits"] - h0["plan_cache_hits"]
+    misses = h1["plan_cache_misses"] - h0["plan_cache_misses"]
+    hit_rate = hits / max(hits + misses, 1)
+    per_query_overhead = plan_s / q.shape[0]
+    share = plan_s / max(batch_s, 1e-12)
+
+    out(f"planner/dispatch,{plan_s * 1e6:.2f},"
+        f"hit_rate={hit_rate:.4f};misses={misses};"
+        f"overhead_us_per_query={per_query_overhead * 1e6:.3f};"
+        f"batch_us={batch_s * 1e6:.0f};overhead_share={share:.5f}")
+
+    # the redesign's acceptance bars — fail the smoke job loudly
+    assert misses == 0, f"plan cache missed {misses}x on repeated requests"
+    assert hit_rate >= 0.99, f"plan-cache hit rate {hit_rate:.3f} < 0.99"
+    assert share < 0.05, (
+        f"plan dispatch is {share:.1%} of batch latency (bar: < 5%)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short request stream (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

@@ -23,7 +23,7 @@ import numpy as np
 
 def main(out=print) -> None:
     from repro.configs.base import SearchConfig
-    from repro.core.distributed import ShardedCorpus, distributed_search
+    from repro.core.distributed import ShardedCorpus, distributed_search_kernel
     from repro.launch.mesh import make_production_mesh
     from repro.roofline import hlo_parse
     from repro.roofline.analysis import ICI_BW
@@ -56,7 +56,7 @@ def main(out=print) -> None:
     queries = sds((q_global, d), jnp.float32)
     results = {}
     for mode in ("fetch", "nsp"):
-        lowered = distributed_search.lower(
+        lowered = distributed_search_kernel.lower(
             corpus_shapes(hot), queries, cfg, "l2", mode=mode, mesh=mesh,
         )
         compiled = lowered.compile()

@@ -30,6 +30,7 @@ MODULES = [
     "sharded_bench",
     "beam_bench",
     "filtered_bench",
+    "planner_bench",
     "kernels_bench",
     "roofline_bench",
 ]

@@ -25,21 +25,21 @@ replication overhead.
 from __future__ import annotations
 
 import argparse
-import dataclasses as dc
 
 import numpy as np
 
 from benchmarks.common import get_index
 from repro.configs.base import SearchConfig
-from repro.core import recall_at_k, search
+from repro.core import recall_at_k
 from repro.core.dataset import exact_knn
 from repro.nand.simulator import (
     simulate,
     simulate_sharded,
-    trace_from_search_result,
-    traces_from_sharded_result,
+    trace_from_plan_execution,
+    traces_from_plan_execution,
 )
-from repro.shard import partition_index, sharded_search
+from repro.plan import Searcher, SearchRequest
+from repro.shard import partition_index
 
 
 def main(out=print, smoke: bool = False) -> None:
@@ -51,22 +51,17 @@ def main(out=print, smoke: bool = False) -> None:
     gt = idx.dataset.gt
     if gt.shape[1] < 10:
         gt = exact_knn(q, idx.dataset.base, 10, metric)
-    trace_kw = dict(
-        dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
-        index_bits=idx.gap.bit_width if idx.gap else 32,
-        pq_bits=idx.codebook.num_subvectors * 8, metric=metric,
-    )
-
     # --- single-tile baseline ------------------------------------------------
-    res1 = search(idx.corpus(), q, cfg, metric)
-    rec1 = recall_at_k(np.asarray(res1.ids), gt, 10)
-    sim1 = simulate(trace_from_search_result(res1, **trace_kw))
+    res1 = Searcher.open(idx, cfg=cfg).search(SearchRequest(queries=q))
+    assert res1.plan.kind == "flat", res1.plan.kind
+    rec1 = recall_at_k(res1.ids, gt, 10)
+    sim1 = simulate(trace_from_plan_execution(res1, index=idx))
     out(f"sharded/baseline/P1,{sim1.latency_us:.1f},"
         f"recall={rec1:.4f};qps={sim1.qps:.0f};util={sim1.core_utilization:.2f}")
 
     def row(label, part, res):
-        rec = recall_at_k(np.asarray(res.ids), gt, 10)
-        sim = simulate_sharded(traces_from_sharded_result(res, **trace_kw))
+        rec = recall_at_k(res.ids, gt, 10)
+        sim = simulate_sharded(traces_from_plan_execution(res, index=idx))
         utils = ";".join(f"{u:.2f}" for u in sim.channel_utilization)
         out(f"sharded/{label},{sim.latency_us:.1f},"
             f"recall={rec:.4f};d_recall={rec - rec1:+.4f};"
@@ -81,7 +76,11 @@ def main(out=print, smoke: bool = False) -> None:
     for policy in policies:
         for p in tile_counts:
             tiled, part = partition_index(idx, p, policy)
-            res = sharded_search(tiled, q, cfg, metric)
+            searcher = Searcher.open(tiled, cfg=cfg, metric=metric)
+            res = searcher.search(SearchRequest(queries=q))
+            # planner regressions fail loudly: the tiled spine must serve
+            assert res.plan.kind == "tiled" and res.stats.num_tiles == p, \
+                f"planner compiled {res.plan.kind}/P={res.stats.num_tiles}"
             rec = row(f"{policy}/P{p}/fanout", part, res)
             if p == 4 and rec < rec1 - 0.01:
                 out(f"sharded/{policy}/P4/RECALL_PARITY_FAIL,0.0,"
@@ -92,15 +91,15 @@ def main(out=print, smoke: bool = False) -> None:
             for nprobe in (1, 2):
                 if nprobe >= p:
                     continue
-                res = sharded_search(tiled, q, cfg, metric,
-                                     probe_tiles=nprobe)
+                res = searcher.search(SearchRequest(queries=q,
+                                                    probe_tiles=nprobe))
                 row(f"{policy}/P{p}/probe{nprobe}", part, res)
             # max-throughput corner: single-tile candidate budget split
             # across channels + single-tile routing
-            tcfg = dc.replace(cfg,
-                              list_size=max(2 * cfg.k, cfg.list_size // p))
-            res = sharded_search(tiled, q, tcfg, metric, probe_tiles=1)
-            row(f"{policy}/P{p}/probe1_L{tcfg.list_size}", part, res)
+            small_l = max(2 * cfg.k, cfg.list_size // p)
+            res = searcher.search(SearchRequest(
+                queries=q, probe_tiles=1, overrides={"list_size": small_l}))
+            row(f"{policy}/P{p}/probe1_L{small_l}", part, res)
 
 
 if __name__ == "__main__":

@@ -18,10 +18,11 @@ import numpy as np
 from benchmarks.common import get_index
 from repro.core.dataset import exact_knn, recall_at_k
 from repro.nand.simulator import (
-    UpdateTrace, simulate_mixed, simulate_updates, trace_from_search_result,
+    UpdateTrace, simulate_mixed, simulate_updates, trace_from_plan_execution,
 )
+from repro.plan import Searcher, SearchRequest
 from repro.serve.engine import ServingEngine
-from repro.stream import MutableIndex, search_merged
+from repro.stream import MutableIndex
 
 
 def _perturbed(base: np.ndarray, n: int, rng) -> np.ndarray:
@@ -39,6 +40,7 @@ def main(out=print) -> None:
 
     # ---- recall + QPS vs delta fraction (deletes fixed at 5%) --------------
     mut = MutableIndex(idx)
+    searcher = Searcher.open(mut)
     deleted = rng.choice(n_base, int(0.05 * n_base), replace=False)
     for e in deleted:
         mut.delete(int(e))
@@ -51,16 +53,21 @@ def main(out=print) -> None:
         grown = frac
         ext_ids, vecs = mut.live_vectors()
         gt = ext_ids[exact_knn(queries, vecs, 10, metric)]
-        res = search_merged(mut, queries)          # warm/compile
+        req = SearchRequest(queries=queries)
+        res = searcher.search(req)                 # warm/compile
+        # planner regressions fail loudly: a mutable target must take the
+        # base+delta merged spine
+        assert res.plan.kind == "merged", res.plan.kind
         t0 = time.time()
         for _ in range(3):
-            res = search_merged(mut, queries)
+            res = searcher.search(req)
         dt = (time.time() - t0) / 3
         rec = recall_at_k(res.ids, gt, 10)
         qps = queries.shape[0] / dt
         out(f"streaming/delta{int(frac*100)}pct,{dt/queries.shape[0]*1e6:.1f},"
-            f"recall={rec:.4f};qps={qps:.0f};live={mut.live_count()}")
-        base_res = res.base
+            f"recall={rec:.4f};qps={qps:.0f};live={mut.live_count()}"
+            f";delta_cand={res.stats.delta_candidates:.1f}")
+        base_res = res
 
     # ---- consolidation restores the single-segment path --------------------
     t0 = time.time()
@@ -68,7 +75,7 @@ def main(out=print) -> None:
     dt_cons = time.time() - t0
     ext_ids, vecs = mut.live_vectors()
     gt = ext_ids[exact_knn(queries, vecs, 10, metric)]
-    res = search_merged(mut, queries)
+    res = Searcher.open(mut).search(SearchRequest(queries=queries))
     rec = recall_at_k(res.ids, gt, 10)
     out(f"streaming/consolidated,{dt_cons*1e6:.0f},"
         f"recall={rec:.4f};wa={mut.write_amplification():.2f}")
@@ -98,11 +105,7 @@ def main(out=print) -> None:
         f"consolidations={eng.stats['consolidations']}")
 
     # ---- NAND update model -------------------------------------------------
-    trace = trace_from_search_result(
-        base_res, dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
-        index_bits=idx.gap.bit_width if idx.gap else 32, pq_bits=8 * idx.codes.shape[1],
-        metric=metric,
-    )
+    trace = trace_from_plan_execution(base_res, index=mut)
     cap = simulate_updates(UpdateTrace(insert_rate=1.0)).update_throughput_per_s
     out(f"streaming/nand-max-updates,0.0,inserts_per_s={cap:.0f}")
     for rate in (1e3, 1e4, 1e5):

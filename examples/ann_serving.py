@@ -1,8 +1,10 @@
 """End-to-end serving driver (the paper's workload kind): batched ANN query
-serving with the Proxima engine — request queue, fixed-batch scheduler,
-latency percentiles, recall — plus a filtered-query flow ("nearest WHERE
-category=c AND price<=p"): per-request ``FilterSpec``s batch by filter hash
-and are answered against only attribute-passing nodes.
+serving through the query-plan layer — one ``Searcher`` facade for direct
+calls, the ``ServingEngine`` (built on the same facade) for queued serving
+with fixed-batch scheduling, latency percentiles and recall — plus a
+filtered-query flow ("nearest WHERE category=c AND price<=p"):
+per-request ``FilterSpec``s compile to ``QueryPlan``s, requests batch by
+plan cache key, and results come back against only attribute-passing nodes.
 
     PYTHONPATH=src python examples/ann_serving.py
 """
@@ -16,6 +18,7 @@ from repro.configs.base import (
 from repro.core import build_index, recall_at_k
 from repro.core.dataset import exact_knn
 from repro.filter import FilterSpec, attach_attributes, random_attributes
+from repro.plan import Searcher, SearchRequest
 from repro.serve.engine import ServingEngine
 
 cfg = ProximaConfig(
@@ -34,6 +37,13 @@ store = attach_attributes(
     idx, random_attributes(idx.dataset.num_base,
                            {"category": 8, "price": 1000}, seed=2)
 )
+
+# --- the Searcher facade: the one supported query API -----------------------
+searcher = Searcher.open(idx)
+res = searcher.search(SearchRequest(queries=idx.dataset.queries[:8]))
+print(f"direct search: plan={res.plan.kind}/{res.plan.strategy} "
+      f"rounds/query {res.stats.rounds:.1f} hops/query {res.stats.hops:.1f}")
+
 eng = ServingEngine(idx, batch_size=32)
 
 print("serving 192 requests (open loop, bursty arrivals) ...")
@@ -60,6 +70,11 @@ print(f"recall@10 {rec:.3f} | batches {eng.stats['batches']} "
 print("serving 64 filtered requests (category=3, price<=250) ...")
 spec = FilterSpec.eq("category", 3) & FilterSpec.range("price", None, 250)
 mask = store.mask(spec)
+# the planner compiles the spec once; every matching request plan-cache-hits
+fplan = eng.searcher.plan(SearchRequest(queries=idx.dataset.queries[0],
+                                        filter=spec))
+print(f"filtered plan: {fplan.kind}/{fplan.strategy} "
+      f"selectivity={fplan.selectivity:.3f} eff_L={fplan.cfg.list_size}")
 frids = [eng.submit(q, filter=spec) for q in idx.dataset.queries[:64]]
 eng.drain()
 fids = np.stack([eng.done[r].ids for r in frids])
@@ -71,4 +86,6 @@ fgt = pids[exact_knn(idx.dataset.queries[:64], idx.dataset.base[pids],
 frec = recall_at_k(fids, fgt, k_eff)
 print(f"filter selectivity {mask.mean():.3f} ({int(mask.sum())} passing) | "
       f"filtered recall@{k_eff} {frec:.3f} | "
-      f"filtered queries {eng.stats['filtered_queries']}")
+      f"filtered queries {eng.stats['filtered_queries']} | "
+      f"plan cache {eng.stats['plan_cache_hits']} hits / "
+      f"{eng.stats['plan_cache_misses']} misses")

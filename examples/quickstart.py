@@ -8,8 +8,9 @@ import numpy as np
 from repro.configs.base import (
     DatasetConfig, GraphConfig, PQConfig, ProximaConfig, SearchConfig,
 )
-from repro.core import build_index, recall_at_k, search
-from repro.nand.simulator import simulate, trace_from_search_result
+from repro.core import build_index, recall_at_k
+from repro.nand.simulator import simulate, trace_from_plan_execution
+from repro.plan import Searcher, SearchRequest
 
 # 1. a synthetic corpus (offline stand-in for SIFT; see DESIGN.md §7)
 cfg = ProximaConfig(
@@ -29,20 +30,18 @@ print(f"  gap encoding: {idx.gap.bit_width} bits/edge "
 print(f"  hot nodes: {idx.hot_count} ({cfg.hot_node_fraction:.0%})")
 print(f"  storage: {idx.index_bytes()}")
 
-# 2. batched search (Algorithm 1, JAX)
-res = search(idx.corpus(), idx.dataset.queries, cfg.search, idx.dataset.metric)
-rec = recall_at_k(np.asarray(res.ids), idx.dataset.gt, 10)
-print(f"\nrecall@10 = {rec:.3f}")
-print(f"per query: {np.asarray(res.n_hops).mean():.0f} expansions, "
-      f"{np.asarray(res.n_pq).mean():.0f} PQ distances, "
-      f"{np.asarray(res.n_acc).mean():.0f} accurate distances "
-      f"({np.asarray(res.n_hot_hops).mean():.0f} hot hits)")
+# 2. batched search (Algorithm 1 through the query-plan layer)
+searcher = Searcher.open(idx)
+res = searcher.search(SearchRequest(queries=idx.dataset.queries))
+rec = recall_at_k(res.ids, idx.dataset.gt, 10)
+print(f"\nrecall@10 = {rec:.3f} (plan: {res.plan.kind}/{res.plan.strategy})")
+print(f"per query: {res.stats.hops:.0f} expansions, "
+      f"{res.stats.pq:.0f} PQ distances, "
+      f"{res.stats.acc:.0f} accurate distances "
+      f"({res.stats.hot_hops:.0f} hot hits)")
 
-# 3. project the measured trace onto the 3D NAND accelerator (§IV)
-tr = trace_from_search_result(
-    res, dim=idx.dataset.dim, r_degree=idx.graph.max_degree,
-    index_bits=idx.gap.bit_width, pq_bits=idx.codebook.num_subvectors * 8,
-    metric=idx.dataset.metric)
+# 3. project the executed plan onto the 3D NAND accelerator (§IV)
+tr = trace_from_plan_execution(res, index=idx)
 sim = simulate(tr)
 print(f"\nProxima accelerator projection: {sim.qps:,.0f} QPS, "
       f"{sim.latency_us:.0f} us/query, {sim.qps_per_watt:,.0f} QPS/W, "

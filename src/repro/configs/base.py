@@ -293,6 +293,32 @@ class FilterConfig:
 
 
 @dataclass(frozen=True)
+class PlanConfig:
+    """Query-plan layer parameters (``repro.plan``) — the single config the
+    ``Searcher`` facade consumes, collapsing what used to be per-feature
+    ``ServingEngine.__init__`` kwargs (num_tiles / shard_policy /
+    probe_tiles / beam_width / ...) into one typed object.
+
+    ``None`` fields defer to the index's own ``ProximaConfig`` (its
+    ``search`` / ``shard`` / ``filter`` sections), so an empty ``PlanConfig``
+    reproduces the index's configured serving mode exactly.
+    """
+    search: Optional["SearchConfig"] = None   # None -> index.config.search
+    beam_width: Optional[int] = None          # override search.beam_width (E)
+    num_tiles: Optional[int] = None           # None -> config.shard.num_tiles
+    shard_policy: Optional[str] = None        # None -> config.shard.policy
+    probe_tiles: Optional[int] = None         # None -> config.shard.probe_tiles
+    filter: Optional["FilterConfig"] = None   # None -> config.filter
+    bloom_bits: int = 1 << 17                 # traversal visited-set filter
+    num_hashes: int = 8
+    use_vmap: Optional[bool] = None           # tiled fan-out style (see shard)
+    # distributed (device-mesh) execution ------------------------------------
+    mode: str = "nsp"                         # nsp | fetch collective mode
+    data_axis: str = "data"
+    queue_axis: str = "model"
+
+
+@dataclass(frozen=True)
 class ProximaConfig:
     dataset: DatasetConfig = field(default_factory=DatasetConfig)
     pq: PQConfig = field(default_factory=PQConfig)

@@ -2,9 +2,12 @@
 data-layout optimizations) as composable JAX modules."""
 from repro.core.dataset import Dataset, exact_knn, make_dataset, recall_at_k
 from repro.core.index import ProximaIndex, build_index
-from repro.core.search import Corpus, SearchResult, search, search_reference
+from repro.core.search import (
+    Corpus, SearchResult, graph_search, search, search_reference,
+)
 
 __all__ = [
+    "graph_search",
     "Dataset",
     "exact_knn",
     "make_dataset",

@@ -115,9 +115,10 @@ def _owned_rows(arr_local, ids, shard_idx, p):
 
 @partial(
     jax.jit,
-    static_argnames=("cfg", "metric", "mode", "mesh", "bloom_bits", "num_hashes"),
+    static_argnames=("cfg", "metric", "mode", "mesh", "data_axis",
+                     "queue_axis", "bloom_bits", "num_hashes"),
 )
-def distributed_search(
+def distributed_search_kernel(
     corpus: ShardedCorpus,
     queries: jnp.ndarray,
     cfg: SearchConfig,
@@ -129,8 +130,10 @@ def distributed_search(
     bloom_bits: int = 1 << 17,
     num_hashes: int = 8,
 ):
-    """Batched distributed search. queries (Q, D) sharded over ``queue_axis``;
-    corpus sharded over ``data_axis``. Returns (ids, dists) of shape (Q, k).
+    """Batched distributed search KERNEL — the ``distributed`` execution
+    spine of a ``repro.plan.QueryPlan``. queries (Q, D) sharded over
+    ``queue_axis``; corpus sharded over ``data_axis``. Returns (ids, dists)
+    of shape (Q, k).
     """
     assert mesh is not None
     if metric == "angular":
@@ -355,3 +358,30 @@ def distributed_search(
         corpus.centroids, corpus.hot_adjacency, corpus.hot_codes,
         corpus.hot_base, corpus.entry_point, corpus.hot_count, queries,
     )
+
+
+def distributed_search(
+    corpus: ShardedCorpus,
+    queries: jnp.ndarray,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    mode: str = "nsp",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
+    queue_axis: str = "model",
+    bloom_bits: int = 1 << 17,
+    num_hashes: int = 8,
+):
+    """DEPRECATED entry point — builds a ``repro.plan.SearchRequest`` over
+    the mesh target and delegates to the ``Searcher`` facade (which calls
+    ``distributed_search_kernel`` with identical arguments, so results are
+    bit-identical). Use ``distributed_search_kernel`` directly for
+    ``.lower``/AOT workflows."""
+    from repro.plan import Searcher, SearchRequest
+    from repro.plan.searcher import warn_legacy
+
+    warn_legacy("core.distributed_search")
+    s = Searcher.open(corpus, cfg=cfg, metric=metric, mesh=mesh, mode=mode,
+                      data_axis=data_axis, queue_axis=queue_axis,
+                      bloom_bits=bloom_bits, num_hashes=num_hashes)
+    return s.search(SearchRequest(queries=queries)).raw

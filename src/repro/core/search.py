@@ -179,7 +179,7 @@ def _merge_sort_topl_bitonic(ids, dists, acc, evaluated, n_ids, n_dists):
     jax.jit,
     static_argnames=("cfg", "metric", "bloom_bits", "num_hashes"),
 )
-def search(
+def graph_search(
     corpus: Corpus,
     queries: jnp.ndarray,
     cfg: SearchConfig,
@@ -188,9 +188,13 @@ def search(
     num_hashes: int = 8,
     node_mask: jnp.ndarray | None = None,
 ) -> SearchResult:
-    """Batched Proxima search. queries: (Q, D). ``node_mask`` (N,) bool, if
-    given, admits only passing nodes to the result set (filtered search —
-    see the module docstring)."""
+    """Batched Proxima traversal KERNEL. queries: (Q, D). ``node_mask`` (N,)
+    bool, if given, admits only passing nodes to the result set (filtered
+    search — see the module docstring).
+
+    This is the innermost compiled engine every ``repro.plan.QueryPlan``
+    composes (flat, masked, per-tile fan-out, merged base segment); call it
+    through ``repro.plan.Searcher`` unless you are writing a kernel."""
     if metric == "angular":
         queries = l2_normalize(queries)
 
@@ -391,6 +395,46 @@ def search(
         ids=out_ids, dists=-neg, n_hops=s.n_hops, n_pq=s.n_pq, n_acc=n_acc,
         n_hot_hops=s.n_hot, n_free_pq=s.n_free, rounds=s.rounds,
     )
+
+
+def search(
+    corpus: Corpus,
+    queries,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    bloom_bits: int = 1 << 17,
+    num_hashes: int = 8,
+    node_mask=None,
+) -> SearchResult:
+    """DEPRECATED entry point — builds a ``repro.plan.SearchRequest`` and
+    delegates to the ``Searcher`` facade (which dispatches back to the
+    ``graph_search`` kernel above with identical arguments, so results are
+    bit-identical).  ``node_mask`` is passed verbatim to the traversal —
+    no selectivity adaptation, exactly the legacy semantics.
+
+    Under an active JAX trace (this name used to be jit-wrapped, so callers
+    could compose it inside jit/vmap) the wrapper forwards straight to the
+    kernel — the plan layer is host-side and cannot consume tracers."""
+    leaves = jax.tree_util.tree_leaves((corpus, queries, node_mask))
+    if any(isinstance(x, jax.core.Tracer) for x in leaves):
+        return graph_search(corpus, queries, cfg, metric, bloom_bits,
+                            num_hashes, node_mask=node_mask)
+
+    from repro.plan import Searcher, SearchRequest
+    from repro.plan.searcher import warn_legacy
+
+    warn_legacy("core.search")
+    s = Searcher.open(corpus, cfg=cfg, metric=metric, bloom_bits=bloom_bits,
+                      num_hashes=num_hashes)
+    res = s.search(SearchRequest(queries=queries, node_mask=node_mask,
+                                 adaptive=False))
+    return res.raw if node_mask is None else res.raw.result
+
+
+# jit-cache introspection rides along so compile-count regression tests keep
+# observing the kernel through the legacy name
+if hasattr(graph_search, "_cache_size"):
+    search._cache_size = graph_search._cache_size
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@ from repro.filter.traversal import (
     FilteredSearchResult,
     adapt_search_cfg,
     filtered_search,
+    scan_search,
     tile_node_masks,
 )
 
@@ -50,6 +51,7 @@ __all__ = [
     "filtered_search",
     "pack_bitmap",
     "random_attributes",
+    "scan_search",
     "tile_node_masks",
     "unpack_bitmap",
 ]

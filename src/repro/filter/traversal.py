@@ -1,5 +1,9 @@
-"""Selectivity-adaptive filtered search.
+"""Selectivity-adaptive filtered search kernels.
 
+The regime DECISION now lives in ``repro.plan.QueryPlanner`` (the
+masked-vs-scan filter strategy of a ``QueryPlan``); this module keeps the
+kernels it composes (``scan_search``, ``adapt_search_cfg``,
+``tile_node_masks``) plus the deprecated ``filtered_search`` wrapper.
 The estimator (exact — the mask is one host-side vectorized pass) routes a
 filtered query batch to one of three regimes:
 
@@ -33,8 +37,7 @@ import numpy as np
 from repro.configs.base import FilterConfig, SearchConfig
 from repro.core.pq import compute_adt, pq_distance
 from repro.core.search import (
-    Corpus, SearchResult, _exact_dist, empty_search_result, l2_normalize,
-    next_pow2, search,
+    Corpus, SearchResult, _exact_dist, l2_normalize, next_pow2,
 )
 
 INF = jnp.float32(jnp.inf)
@@ -139,9 +142,11 @@ def _zero_counters(nq: int):
                 rounds=z)
 
 
-def _scan(corpus: Corpus, queries: jnp.ndarray, mask: np.ndarray,
-          cfg: SearchConfig, metric: str, fcfg: FilterConfig,
-          selectivity: float) -> FilteredSearchResult:
+def scan_search(corpus: Corpus, queries: jnp.ndarray, mask: np.ndarray,
+                cfg: SearchConfig, metric: str, fcfg: FilterConfig,
+                selectivity: float) -> FilteredSearchResult:
+    """Bitmap-driven brute-force PQ scan KERNEL over the passing subset —
+    the ``scan`` strategy of a ``repro.plan.QueryPlan``."""
     pass_ids = np.nonzero(mask)[0].astype(np.int32)
     pot = next_pow2(len(pass_ids))
     sel_ids = np.zeros((pot,), np.int32)
@@ -181,30 +186,16 @@ def filtered_search(
     metric: str = "l2",
     filter_cfg: Optional[FilterConfig] = None,
 ) -> FilteredSearchResult:
-    """Filtered Proxima search over a device corpus. ``mask`` is the
-    compiled (N,) pass mask (``AttributeStore.mask(spec)``); regime choice
-    per the module docstring."""
-    fcfg = filter_cfg or FilterConfig()
-    queries = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
-    mask_np = np.asarray(mask, bool)
-    n = mask_np.size
-    n_pass = int(mask_np.sum())
-    sel = n_pass / max(n, 1)
-    nq = queries.shape[0]
+    """DEPRECATED entry point — the empty/scan/masked regime choice now
+    lives in ``repro.plan.QueryPlanner`` (the masked-vs-scan filter
+    strategy of a ``QueryPlan``); this wrapper builds a mask request with
+    ``adaptive=True`` and delegates, reproducing the legacy decision and
+    kernels bit-identically."""
+    from repro.plan import Searcher, SearchRequest
+    from repro.plan.searcher import warn_legacy
 
-    if n_pass == 0:
-        res = empty_search_result(nq, cfg.k)
-        return FilteredSearchResult(
-            ids=np.asarray(res.ids), dists=np.asarray(res.dists),
-            result=res, mode="empty", selectivity=0.0, effective=cfg,
-        )
-    if sel <= fcfg.brute_force_selectivity or n_pass <= cfg.k:
-        return _scan(corpus, queries, mask_np, cfg, metric, fcfg, sel)
-
-    eff = adapt_search_cfg(cfg, sel, fcfg)
-    res = search(corpus, queries, eff, metric,
-                 node_mask=jnp.asarray(mask_np))
-    return FilteredSearchResult(
-        ids=np.asarray(res.ids), dists=np.asarray(res.dists), result=res,
-        mode="traversal", selectivity=sel, effective=eff,
-    )
+    warn_legacy("filter.filtered_search")
+    s = Searcher.open(corpus, cfg=cfg, metric=metric, filter_cfg=filter_cfg)
+    res = s.search(SearchRequest(queries=queries, node_mask=mask,
+                                 adaptive=True))
+    return res.raw

@@ -574,3 +574,112 @@ def simulate_sharded(
         load_imbalance=imbalance,
         merge_overhead_us=merge_us,
     )
+
+
+# ---------------------------------------------------------------------------
+# Plan-derived billing (repro.plan)
+# ---------------------------------------------------------------------------
+
+def _plan_geometry(index, dim, r_degree, index_bits, pq_bits) -> dict:
+    """Resolve trace geometry from an index handle (a ``ProximaIndex`` or a
+    ``stream.MutableIndex``) unless given explicitly."""
+    if index is not None:
+        base = index.base if hasattr(index, "delta") and \
+            hasattr(index, "base") else index
+        dim = base.dataset.dim if dim is None else dim
+        r_degree = base.graph.adjacency.shape[1] if r_degree is None \
+            else r_degree
+        index_bits = (base.gap.bit_width if base.gap else 32) \
+            if index_bits is None else index_bits
+        pq_bits = 8 * base.codes.shape[1] if pq_bits is None else pq_bits
+    missing = [n for n, v in (("dim", dim), ("r_degree", r_degree),
+                              ("index_bits", index_bits),
+                              ("pq_bits", pq_bits)) if v is None]
+    if missing:
+        raise ValueError(
+            f"trace geometry underspecified: pass index= or {missing}"
+        )
+    return dict(dim=dim, r_degree=r_degree, index_bits=index_bits,
+                pq_bits=pq_bits)
+
+
+def _plan_filter_billing(pres) -> dict:
+    """Filter billing facts read off the executed plan: where the predicate
+    ran (pushdown vs host), the attribute-word width, and the passing
+    fraction of the scored candidate stream (scan mode's candidates are the
+    passing subset itself — every scored candidate crosses the channel, so
+    pushdown must not discount it)."""
+    plan = pres.plan
+    filtered = plan.strategy not in ("none",)
+    if not filtered:
+        return dict(attr_bits=0, filter_mode="off", filter_selectivity=1.0)
+    sel = pres.stats.selectivity if plan.strategy in ("masked", "adaptive") \
+        else 1.0
+    # a merged plan defers the regime choice to execute time; when its base
+    # actually ran the bitmap scan, the scored candidates ARE the passing
+    # subset and every one crosses the channel — no pushdown discount
+    if plan.strategy == "adaptive" and \
+            getattr(pres.raw, "base_mode", None) in ("scan", "empty"):
+        sel = 1.0
+    return dict(
+        attr_bits=plan.attr_bits,
+        filter_mode="pushdown" if plan.pushdown else "host",
+        filter_selectivity=float(sel),
+    )
+
+
+def _plan_counters(pres):
+    """The counter-carrying kernel result inside a plan execution."""
+    raw = pres.raw
+    if hasattr(raw, "delta_candidates"):      # MergedResult: bill the base
+        return raw.base
+    if hasattr(raw, "n_hops") or hasattr(raw, "per_tile") \
+            or hasattr(raw, "result"):        # core / sharded / filtered
+        return raw
+    raise ValueError(                         # distributed (ids, dists) pair
+        "distributed plan executions carry no NAND counters — bill a "
+        "flat/tiled/merged execution of the same workload instead"
+    )
+
+
+def trace_from_plan_execution(pres, *, index=None, dim=None, r_degree=None,
+                              index_bits=None, pq_bits=None, use_hot=True,
+                              beam_width=None) -> WorkloadTrace:
+    """One aggregate ``WorkloadTrace`` from a ``repro.plan.SearchResult`` —
+    billing derived from the PLAN (filter strategy, selectivity, attribute
+    word width, metric, PQ use) instead of hand-threaded per-path trace
+    constructor arguments. Geometry comes from ``index=`` (the served
+    ``ProximaIndex``/``MutableIndex``) or the explicit kwargs.
+
+    ``beam_width`` follows ``trace_from_search_result``: None bills the
+    REALIZED per-round parallelism measured from the counters; pass
+    ``pres.plan.cfg.beam_width`` to bill the nominal E instead."""
+    plan = pres.plan
+    geo = _plan_geometry(index, dim, r_degree, index_bits, pq_bits)
+    fb = _plan_filter_billing(pres)
+    return trace_from_search_result(
+        _plan_counters(pres), metric=plan.metric, use_pq=plan.cfg.use_pq,
+        use_hot=use_hot, beam_width=beam_width, **geo, **fb,
+    )
+
+
+def traces_from_plan_execution(pres, *, index=None, dim=None, r_degree=None,
+                               index_bits=None, pq_bits=None, use_hot=True,
+                               beam_width=None) -> list:
+    """Per-channel ``WorkloadTrace`` list from a tiled plan execution (the
+    input ``simulate_sharded`` consumes); the execution's raw result must
+    carry a per-tile counter axis (a tiled plan, or a merged plan over a
+    tiled base)."""
+    plan = pres.plan
+    geo = _plan_geometry(index, dim, r_degree, index_bits, pq_bits)
+    fb = _plan_filter_billing(pres)
+    counters = _plan_counters(pres)
+    if not hasattr(counters, "per_tile"):
+        raise ValueError(
+            "plan execution has no per-tile counter axis — use "
+            "trace_from_plan_execution for flat/merged-over-flat plans"
+        )
+    return traces_from_sharded_result(
+        counters, metric=plan.metric, use_pq=plan.cfg.use_pq,
+        use_hot=use_hot, beam_width=beam_width, **geo, **fb,
+    )

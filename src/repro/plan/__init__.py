@@ -1,0 +1,36 @@
+"""Unified query-plan layer: one ``Searcher`` facade + ``QueryPlanner``
+replacing the five parallel search entry points (``core.search``,
+``filter.filtered_search``, ``shard.sharded_search``,
+``stream.search_merged``, ``core.distributed_search`` — all kept as thin
+deprecated wrappers that build a ``SearchRequest`` and delegate here).
+
+    request -> QueryPlanner.plan -> QueryPlan -> kernels -> SearchResult
+                                                (stats + NAND trace handle)
+"""
+from repro.configs.base import PlanConfig
+from repro.plan.planner import (
+    Execution,
+    IndexCapabilities,
+    QueryPlan,
+    QueryPlanner,
+)
+from repro.plan.request import SearchRequest, SearchResult, SearchStats
+from repro.plan.searcher import (
+    Searcher,
+    validate_attribute_store,
+    warn_legacy,
+)
+
+__all__ = [
+    "Execution",
+    "IndexCapabilities",
+    "PlanConfig",
+    "QueryPlan",
+    "QueryPlanner",
+    "SearchRequest",
+    "SearchResult",
+    "SearchStats",
+    "Searcher",
+    "validate_attribute_store",
+    "warn_legacy",
+]

@@ -1,0 +1,103 @@
+"""Typed request/result envelope of the query-plan layer.
+
+One logical operation — route a query batch through PQ-approximate graph
+traversal with early termination, billed against the NAND channel model —
+used to be reachable through five parallel entry points with incompatible
+signatures.  ``SearchRequest`` is the single request shape they all reduce
+to, ``SearchResult`` the single reply (numpy ids/dists plus a structured
+``SearchStats`` instead of ad-hoc stats dicts, and the raw kernel result for
+NAND billing via ``nand.simulator.trace_from_plan_execution``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Tuple
+
+from repro.filter.spec import FilterSpec
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One search call against a ``Searcher``.
+
+    ``queries`` is a ``(Q, D)`` (or single ``(D,)``) float array.  ``k``
+    defaults to the searcher's configured ``SearchConfig.k``.  ``filter`` is
+    a hashable :class:`repro.filter.FilterSpec` — the typed replacement for
+    the untyped per-path filter arguments.  ``overrides`` are per-request
+    ``SearchConfig`` field overrides (e.g. ``{"beam_width": 4}``) applied on
+    top of the searcher's base config; together with ``filter`` they define
+    the request's plan-cache identity.  ``tenant`` is the namespace slot the
+    multi-tenancy roadmap item composes against (recorded on the plan,
+    unused by single-tenant execution).
+
+    ``node_mask`` is the legacy escape hatch: a caller-precompiled admission
+    mask in the target's native form ((N,) bool for a flat corpus, (P, Nt)
+    per-tile slices for a tiled one).  The deprecated wrappers use it to
+    delegate without an attribute store; ``adaptive`` selects whether the
+    selectivity regimes (scan / inflated masked traversal — the
+    ``filtered_search`` semantics) apply to it, or the mask is passed to the
+    traversal verbatim (the ``core.search(node_mask=...)`` semantics).
+    """
+    queries: Any
+    k: Optional[int] = None
+    filter: Optional[FilterSpec] = None
+    tenant: Optional[str] = None
+    overrides: Any = ()
+    probe_tiles: Optional[int] = None
+    # legacy-wrapper escape hatch (see class docstring)
+    node_mask: Optional[Any] = None
+    adaptive: bool = True
+
+    def override_items(self) -> Tuple[Tuple[str, Any], ...]:
+        """Overrides as a sorted, hashable tuple (the plan-cache key part)."""
+        if isinstance(self.overrides, Mapping):
+            return tuple(sorted(self.overrides.items()))
+        return tuple(self.overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchStats:
+    """Structured per-execution search statistics — the typed replacement
+    for the ad-hoc stats dicts the five legacy paths each rolled by hand.
+    Counters are per-query means over the batch (tiled executions sum the
+    per-channel counters first, so they carry the TOTAL work a query costs
+    across all channels — same convention as the NAND workload traces)."""
+    queries: int = 0                 # batch size executed
+    k: int = 0
+    kind: str = "flat"               # flat | tiled | merged | distributed
+    strategy: str = "none"           # none | masked | scan | empty | adaptive
+    selectivity: float = 1.0         # passing fraction (1.0 unfiltered)
+    hops: float = 0.0                # vertex expansions (index fetches)
+    pq: float = 0.0                  # PQ distance computations
+    acc: float = 0.0                 # accurate distance computations
+    hot_hops: float = 0.0            # expansions served by hot-node replicas
+    free_pq: float = 0.0             # PQ fetches covered by hot pages
+    rounds: float = 0.0              # serial traversal rounds
+    delta_candidates: float = 0.0    # delta-segment candidates (merged path)
+    beam_width: int = 1              # nominal E executed
+    num_tiles: int = 1
+
+    def as_dict(self) -> dict:
+        """Back-compat accessor: the dict shape legacy stats consumers read."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Plan-layer search reply.
+
+    ``ids``/``dists`` are host numpy ``(Q, k)`` arrays (-1 / +inf padded
+    where a filter admits fewer than k candidates).  ``stats`` is the
+    structured counter record; ``plan`` the executed :class:`QueryPlan`
+    (its strategy/selectivity/beam fields drive NAND billing); ``raw`` the
+    untouched kernel result (``core.search.SearchResult``,
+    ``filter.FilteredSearchResult``, ``shard.ShardedSearchResult``,
+    ``stream.MergedResult`` or a distributed ``(ids, dists)`` pair) — the
+    optional workload-trace handle
+    ``nand.simulator.trace_from_plan_execution`` consumes.
+    """
+    ids: Any
+    dists: Any
+    stats: SearchStats
+    plan: Any
+    raw: Any

@@ -1,0 +1,324 @@
+"""``Searcher`` — the one supported host-side query API.
+
+NDSEARCH and the computational-storage ANN platform of Kim et al. both hide
+their accelerators behind a single query facade with an internal scheduler
+picking the execution strategy; ``Searcher`` is that facade for this stack::
+
+    s = Searcher.open(index, num_tiles=4, probe_tiles=2)
+    res = s.search(SearchRequest(queries=q, k=10,
+                                 filter=FilterSpec.eq("category", 3)))
+    res.ids, res.dists            # (Q, k) numpy
+    res.stats.as_dict()           # structured SearchStats
+    res.plan                      # the executed QueryPlan (billing handle)
+
+``open`` accepts every target the five legacy entry points used to take —
+a built ``ProximaIndex``, a streaming ``stream.MutableIndex``, a raw device
+``core.search.Corpus``, a partitioned ``shard.TiledCorpus``, or a
+round-robin ``core.distributed.ShardedCorpus`` plus device mesh — resolves
+a :class:`repro.configs.base.PlanConfig` against the index's own config,
+and hands planning/execution to :class:`QueryPlanner`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+from repro.configs.base import (
+    FilterConfig, PlanConfig, SearchConfig, ShardConfig,
+)
+from repro.plan.planner import (
+    Execution, IndexCapabilities, QueryPlan, QueryPlanner,
+)
+from repro.plan.request import SearchRequest, SearchResult
+
+
+def warn_legacy(old: str, new: str = "repro.plan.Searcher.search") -> None:
+    """One DeprecationWarning per legacy call site — the five pre-plan entry
+    points are kept as thin wrappers that build a request and delegate."""
+    warnings.warn(
+        f"{old} is a deprecated entry point kept for compatibility; build a "
+        f"SearchRequest and call {new} instead (see README 'query plan "
+        f"layer')",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+def validate_attribute_store(store, expected_rows: int, owner: str):
+    """THE attribute-store/corpus length check, shared by ``Searcher.open``
+    and ``ServingEngine`` (it used to be copy-pasted per engine branch).
+    Returns the store for chaining; ``None`` passes through."""
+    if store is not None and len(store) != expected_rows:
+        raise ValueError(
+            f"attribute store has {len(store)} rows, {owner} has "
+            f"{expected_rows}"
+        )
+    return store
+
+
+class Searcher:
+    """Facade over one opened search target.  Use :meth:`open`."""
+
+    def __init__(self, *, planner: QueryPlanner, plan_cfg: PlanConfig,
+                 index=None, num_tiles: int = 1,
+                 shard_policy: Optional[str] = None):
+        self.planner = planner
+        self.plan_cfg = plan_cfg
+        self._index = index
+        self.num_tiles = num_tiles
+        self.shard_policy = shard_policy
+
+    # --------------------------------------------------------------- opening
+    @classmethod
+    def open(cls, index, plan: Optional[PlanConfig] = None, *,
+             cfg: Optional[SearchConfig] = None,
+             metric: Optional[str] = None,
+             attributes=None,
+             num_tiles: Optional[int] = None,
+             shard_policy: Optional[str] = None,
+             probe_tiles: Optional[int] = None,
+             beam_width: Optional[int] = None,
+             filter_cfg: Optional[FilterConfig] = None,
+             bloom_bits: Optional[int] = None,
+             num_hashes: Optional[int] = None,
+             use_vmap: Optional[bool] = None,
+             mesh=None,
+             mode: Optional[str] = None,
+             data_axis: Optional[str] = None,
+             queue_axis: Optional[str] = None) -> "Searcher":
+        """Open a search target.  Keyword arguments override the matching
+        ``PlanConfig`` fields; unset fields defer to the index's own
+        ``ProximaConfig`` sections, so ``Searcher.open(index)`` reproduces
+        the index's configured serving mode exactly."""
+        pc = plan or PlanConfig()
+        kw = dict(search=cfg, num_tiles=num_tiles, shard_policy=shard_policy,
+                  probe_tiles=probe_tiles, beam_width=beam_width,
+                  filter=filter_cfg, bloom_bits=bloom_bits,
+                  num_hashes=num_hashes, use_vmap=use_vmap, mode=mode,
+                  data_axis=data_axis, queue_axis=queue_axis)
+        pc = dataclasses.replace(
+            pc, **{k: v for k, v in kw.items() if v is not None})
+
+        from repro.core.search import Corpus
+
+        if mesh is not None or _is_sharded_corpus(index):
+            return cls._open_distributed(index, pc, metric, mesh)
+        if _is_mutable(index):
+            return cls._open_mutable(index, pc, metric, attributes)
+        if isinstance(index, Corpus):
+            return cls._open_corpus(index, pc, metric, attributes)
+        if _is_tiled(index):
+            return cls._open_tiled(index, pc, metric, attributes)
+        return cls._open_index(index, pc, metric, attributes)
+
+    # -- target-specific constructors (mirror the legacy engine branches) ----
+    @classmethod
+    def _resolve_cfg(cls, pc: PlanConfig, default: SearchConfig):
+        scfg = pc.search or default
+        if pc.beam_width is not None:
+            scfg = dataclasses.replace(scfg, beam_width=pc.beam_width)
+        return scfg
+
+    @staticmethod
+    def _probe_warning(probe_tiles: int, num_tiles: int, policy) -> None:
+        if probe_tiles and num_tiles > 1 and policy != "cluster":
+            warnings.warn(
+                "probe_tiles routing assumes geometry-aware tiles "
+                "(shard_policy='cluster'); with hash/contiguous allocation "
+                "tile centroids are near-identical and routed recall "
+                "collapses", stacklevel=3,
+            )
+
+    @classmethod
+    def _open_index(cls, index, pc, metric, attributes):
+        scfg = cls._resolve_cfg(pc, index.config.search)
+        metric = metric or index.dataset.metric
+        fcfg = pc.filter or getattr(index.config, "filter", None) \
+            or FilterConfig()
+        shard_cfg = getattr(index.config, "shard", None) or ShardConfig()
+        n_tiles = shard_cfg.num_tiles if pc.num_tiles is None else pc.num_tiles
+        policy = shard_cfg.policy if pc.shard_policy is None \
+            else pc.shard_policy
+        probe = shard_cfg.probe_tiles if pc.probe_tiles is None \
+            else pc.probe_tiles
+        attributes = validate_attribute_store(
+            attributes, index.dataset.num_base, "index"
+        ) if attributes is not None else getattr(index, "attributes", None)
+        tiled = corpus = None
+        if n_tiles > 1:
+            tiled, _ = index.sharded_corpus(n_tiles, policy)
+        else:
+            corpus = index.corpus()
+        cls._probe_warning(probe, n_tiles, policy)
+        caps = IndexCapabilities(
+            kind="tiled" if tiled is not None else "flat",
+            tiled=tiled is not None, num_tiles=n_tiles,
+            has_attributes=attributes is not None,
+        )
+        planner = QueryPlanner(
+            capabilities=caps, cfg=scfg, metric=metric, filter_cfg=fcfg,
+            plan_cfg=pc, corpus=corpus, tiled=tiled, attributes=attributes,
+            probe_tiles=probe,
+        )
+        return cls(planner=planner, plan_cfg=pc, index=index,
+                   num_tiles=n_tiles, shard_policy=policy)
+
+    @classmethod
+    def _open_mutable(cls, mutable, pc, metric, attributes):
+        base = mutable.base
+        scfg = cls._resolve_cfg(pc, base.config.search)
+        metric = metric or base.dataset.metric
+        fcfg = pc.filter or getattr(base.config, "filter", None) \
+            or FilterConfig()
+        shard_cfg = getattr(base.config, "shard", None) or ShardConfig()
+        probe = shard_cfg.probe_tiles if pc.probe_tiles is None \
+            else pc.probe_tiles
+        if attributes is not None:
+            validate_attribute_store(
+                attributes, mutable.next_ext,
+                "mutable index (allocated external ids)",
+            )
+            mutable.attributes = attributes
+        # tiling defaults come from the MutableIndex itself (it may have
+        # been tiled manually); sync back only on an explicit request so an
+        # opener with defaults never clobbers the index's serving mode
+        n_tiles = mutable.num_tiles if pc.num_tiles is None else pc.num_tiles
+        policy = mutable.shard_policy if pc.shard_policy is None \
+            else pc.shard_policy
+        if (n_tiles, policy) != (mutable.num_tiles, mutable.shard_policy):
+            mutable.set_num_tiles(n_tiles, policy)
+        cls._probe_warning(probe, n_tiles, policy)
+        caps = IndexCapabilities(
+            kind="merged", mutable=True, tiled=n_tiles > 1,
+            num_tiles=n_tiles,
+            has_attributes=mutable.attributes is not None,
+        )
+        planner = QueryPlanner(
+            capabilities=caps, cfg=scfg, metric=metric, filter_cfg=fcfg,
+            plan_cfg=pc, mutable=mutable, attributes=mutable.attributes,
+            probe_tiles=probe,
+        )
+        return cls(planner=planner, plan_cfg=pc, index=mutable,
+                   num_tiles=n_tiles, shard_policy=policy)
+
+    @classmethod
+    def _open_corpus(cls, corpus, pc, metric, attributes):
+        scfg = cls._resolve_cfg(pc, pc.search or SearchConfig())
+        caps = IndexCapabilities(kind="flat",
+                                 has_attributes=attributes is not None)
+        planner = QueryPlanner(
+            capabilities=caps, cfg=scfg, metric=metric or "l2",
+            filter_cfg=pc.filter or FilterConfig(), plan_cfg=pc,
+            corpus=corpus, attributes=attributes,
+        )
+        return cls(planner=planner, plan_cfg=pc)
+
+    @classmethod
+    def _open_tiled(cls, tiled, pc, metric, attributes):
+        scfg = cls._resolve_cfg(pc, pc.search or SearchConfig())
+        probe = pc.probe_tiles or 0
+        caps = IndexCapabilities(kind="tiled", tiled=True,
+                                 num_tiles=tiled.num_tiles,
+                                 has_attributes=attributes is not None)
+        planner = QueryPlanner(
+            capabilities=caps, cfg=scfg, metric=metric or "l2",
+            filter_cfg=pc.filter or FilterConfig(), plan_cfg=pc,
+            tiled=tiled, attributes=attributes, probe_tiles=probe,
+        )
+        return cls(planner=planner, plan_cfg=pc,
+                   num_tiles=tiled.num_tiles)
+
+    @classmethod
+    def _open_distributed(cls, dcorpus, pc, metric, mesh):
+        if mesh is None:
+            raise ValueError("distributed targets need mesh=")
+        scfg = cls._resolve_cfg(pc, pc.search or SearchConfig())
+        caps = IndexCapabilities(
+            kind="distributed", mesh_devices=int(mesh.size),
+            num_tiles=getattr(dcorpus, "num_shards", 1),
+        )
+        planner = QueryPlanner(
+            capabilities=caps, cfg=scfg, metric=metric or "l2",
+            filter_cfg=pc.filter or FilterConfig(), plan_cfg=pc,
+            dcorpus=dcorpus, mesh=mesh,
+        )
+        return cls(planner=planner, plan_cfg=pc,
+                   num_tiles=getattr(dcorpus, "num_shards", 1))
+
+    # -------------------------------------------------------------- querying
+    def plan(self, request: SearchRequest) -> QueryPlan:
+        return self.planner.plan(request)
+
+    def execute(self, plan: QueryPlan, queries) -> Execution:
+        """Run a precompiled plan over a (possibly padded) query batch —
+        the serving engine's batch-flush path."""
+        return self.planner.execute(plan, queries)
+
+    def search(self, request: SearchRequest) -> SearchResult:
+        """Plan + execute one request.  The only supported entry point."""
+        plan = self.planner.plan(request)
+        ex = self.planner.execute(plan, request.queries)
+        return SearchResult(ids=ex.ids, dists=ex.dists,
+                            stats=self.planner.stats_for(plan, ex),
+                            plan=plan, raw=ex.raw)
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def cfg(self) -> SearchConfig:
+        return self.planner.cfg
+
+    @property
+    def metric(self) -> str:
+        return self.planner.metric
+
+    @property
+    def filter_cfg(self) -> FilterConfig:
+        return self.planner.filter_cfg
+
+    @property
+    def capabilities(self) -> IndexCapabilities:
+        return self.planner.capabilities
+
+    @property
+    def mutable(self):
+        return self.planner.mutable
+
+    @property
+    def corpus(self):
+        return self.planner.corpus
+
+    @property
+    def tiled(self):
+        return self.planner.tiled
+
+    @property
+    def attributes(self):
+        return self.planner.attributes
+
+    @property
+    def probe_tiles(self) -> int:
+        return self.planner.probe_tiles
+
+    @property
+    def index(self):
+        """Current base index — the mutable's latest after consolidation."""
+        if self.planner.mutable is not None:
+            return self.planner.mutable.base
+        return self._index
+
+    def plan_cache_stats(self) -> dict:
+        return {"plan_cache_hits": self.planner.plan_cache_hits,
+                "plan_cache_misses": self.planner.plan_cache_misses}
+
+
+def _is_mutable(obj) -> bool:
+    return hasattr(obj, "delta") and hasattr(obj, "tombstones") \
+        and hasattr(obj, "base")
+
+
+def _is_tiled(obj) -> bool:
+    return hasattr(obj, "tile_ids") and hasattr(obj, "entry_points")
+
+
+def _is_sharded_corpus(obj) -> bool:
+    return hasattr(obj, "num_shards") and hasattr(obj, "hot_adjacency")

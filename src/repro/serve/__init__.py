@@ -1,1 +1,5 @@
-"""repro.serve subpackage."""
+"""repro.serve subpackage — the batched serving engine, built on the
+query-plan layer (``repro.plan.Searcher``)."""
+from repro.serve.engine import EngineStats, Request, ServingEngine
+
+__all__ = ["EngineStats", "Request", "ServingEngine"]

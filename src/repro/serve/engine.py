@@ -1,18 +1,29 @@
 """Batched ANN-search serving engine — the software twin of the paper's
-search-engine frontend (scheduler + N_q queues, §IV-D).
+search-engine frontend (scheduler + N_q queues, §IV-D), rebuilt on the
+query-plan layer.
 
-Requests arrive individually; the scheduler packs them into fixed-size
-batches (the JAX search is compiled for a fixed query-batch shape = the
-ASIC's queue count) with a flush timeout, runs the compiled search, and
-completes futures. Single-threaded event-loop style, deterministic.
+Requests arrive individually; each ``submit`` compiles (or plan-cache-hits)
+a ``repro.plan.QueryPlan`` and the scheduler packs requests into fixed-size
+batches BY PLAN CACHE KEY (requests sharing a compiled execution strategy —
+same kind, filter strategy, effective config — flush together; with uniform
+filters this degenerates to plain FIFO batching, exactly the old
+filter-hash behaviour).  The flush runs the plan once over the padded
+bucket through the shared ``Searcher`` facade and completes futures.
+Single-threaded event-loop style, deterministic.
 
-The engine serves either a frozen ``ProximaIndex`` or a streaming
-``stream.MutableIndex``. In streaming mode ``insert``/``delete`` interleave
-with ``submit``: updates apply immediately (the delta segment is
-DRAM-resident), queued queries observe every update applied before their
-batch flushes, and consolidation runs *between* batches once the delta
-exceeds its configured fraction — never inside one, so the compiled base
-search shape is stable within a batch.
+The engine serves every target the plan layer can open — a frozen
+``ProximaIndex`` (flat or tiled) or a streaming ``stream.MutableIndex``.
+In streaming mode ``insert``/``delete`` interleave with ``submit``: updates
+apply immediately (the delta segment is DRAM-resident), queued queries
+observe every update applied before their batch flushes, and consolidation
+runs *between* batches once the delta exceeds its configured fraction —
+never inside one, so the compiled base search shape is stable within a
+batch.
+
+All per-feature constructor kwargs (num_tiles / shard_policy / probe_tiles
+/ beam_width) are legacy sugar folded into one ``PlanConfig``; the ad-hoc
+per-spec ``_filter_cache`` is gone — compiled masks live in the planner's
+artifact cache, keyed by plan.
 """
 from __future__ import annotations
 
@@ -21,15 +32,14 @@ import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Union
 
-import jax
 import numpy as np
 
-from repro.configs.base import SearchConfig
-from repro.core import search
-from repro.core.search import next_pow2
+from repro.configs.base import PlanConfig, SearchConfig
 from repro.core.index import ProximaIndex
+from repro.core.search import next_pow2
+from repro.filter.spec import FilterSpec
+from repro.plan import QueryPlan, Searcher, SearchRequest
 from repro.stream.mutable import MutableIndex
-from repro.stream.searcher import search_merged
 
 
 @dataclasses.dataclass
@@ -40,14 +50,36 @@ class Request:
     t_done: float = 0.0
     ids: Optional[np.ndarray] = None
     dists: Optional[np.ndarray] = None
-    # per-request attribute filter (repro.filter.FilterSpec) — requests
-    # sharing a spec (by hash) are batched together so one compiled masked
-    # search serves the whole batch; None = unfiltered
-    filter: Optional[object] = None
+    # per-request attribute filter — requests sharing a compiled plan (the
+    # spec is part of its cache key) are batched together so one compiled
+    # execution serves the whole batch; None = unfiltered
+    filter: Optional[FilterSpec] = None
+    # the compiled strategy serving this request (assigned at submit)
+    plan: Optional[QueryPlan] = None
 
     @property
     def latency_ms(self) -> float:
         return (self.t_done - self.t_submit) * 1e3
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Structured serving counters — the typed record ``ServingEngine.stats``
+    derives its back-compat dict from (no more hand-maintained counter dict
+    to drift)."""
+    batches: int = 0
+    queries: int = 0
+    pad_fraction: float = 0.0        # running MEAN pad share over batches
+    inserts: int = 0
+    deletes: int = 0
+    consolidations: int = 0
+    filtered_queries: int = 0
+    filter_scan_batches: int = 0
+    plan_cache_hits: int = 0         # synced from the planner at read time
+    plan_cache_misses: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 class ServingEngine:
@@ -63,108 +95,26 @@ class ServingEngine:
         probe_tiles: Optional[int] = None,
         beam_width: Optional[int] = None,
         attributes=None,
+        plan: Optional[PlanConfig] = None,
     ):
-        self.mutable = index if isinstance(index, MutableIndex) else None
-        self._index = index.base if self.mutable else index
-        self.cfg = cfg or self.index.config.search
-        if beam_width is not None:
-            self.cfg = dataclasses.replace(self.cfg, beam_width=beam_width)
-        self.metric = self.index.dataset.metric
+        pcfg = plan or PlanConfig()
+        legacy = dict(search=cfg, num_tiles=num_tiles,
+                      shard_policy=shard_policy, probe_tiles=probe_tiles,
+                      beam_width=beam_width)
+        pcfg = dataclasses.replace(
+            pcfg, **{k: v for k, v in legacy.items() if v is not None})
+        self.searcher = Searcher.open(index, pcfg, attributes=attributes)
         self.batch_size = batch_size
         self.flush_us = flush_us
         self.auto_consolidate = auto_consolidate
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self._next = 0
-        self.stats = {
-            "batches": 0, "queries": 0, "pad_fraction": 0.0,
-            "inserts": 0, "deletes": 0, "consolidations": 0,
-            "filtered_queries": 0, "filter_scan_batches": 0,
-        }
-        # ----- filtered-search plumbing ------------------------------------
-        # getattr: configs/indexes unpickled from pre-filter-layer caches
-        from repro.configs.base import FilterConfig
-
-        self.filter_cfg = (
-            getattr(self.index.config, "filter", None) or FilterConfig()
-        )
-        if self.mutable is not None:
-            if attributes is not None:
-                if len(attributes) != self.mutable.next_ext:
-                    raise ValueError(
-                        f"attribute store has {len(attributes)} rows, "
-                        f"mutable index has allocated "
-                        f"{self.mutable.next_ext} external ids"
-                    )
-                self.mutable.attributes = attributes
-            self.attributes = self.mutable.attributes
-        else:
-            if attributes is not None and \
-                    len(attributes) != self._index.dataset.num_base:
-                raise ValueError(
-                    f"attribute store has {len(attributes)} rows, index "
-                    f"has {self._index.dataset.num_base} vertices"
-                )
-            self.attributes = (
-                attributes if attributes is not None
-                else getattr(self._index, "attributes", None)
-            )
-        self._filter_cache: Dict[object, dict] = {}  # spec -> mask/cfg/tiles
-        # ----- multi-channel (sharded) base path ---------------------------
-        # getattr: configs unpickled from pre-shard-layer caches lack .shard
-        from repro.configs.base import ShardConfig
-
-        shard_cfg = getattr(self.index.config, "shard", None) or ShardConfig()
-        self.probe_tiles = (
-            shard_cfg.probe_tiles if probe_tiles is None else probe_tiles
-        )
-        self.tiled = None
-        self.partition = None
-        if self.mutable is not None:
-            # defaults come from the MutableIndex itself (it may have been
-            # tiled manually via set_num_tiles); sync back only when the
-            # caller explicitly asked for a tiling, so an engine constructed
-            # with defaults never clobbers the index's serving mode
-            self.num_tiles = (
-                self.mutable.num_tiles if num_tiles is None else num_tiles
-            )
-            self.shard_policy = (
-                self.mutable.shard_policy if shard_policy is None
-                else shard_policy
-            )
-            if (self.num_tiles, self.shard_policy) != (
-                self.mutable.num_tiles, self.mutable.shard_policy
-            ):
-                self.mutable.set_num_tiles(self.num_tiles, self.shard_policy)
-            self.corpus = None
-        else:
-            self.num_tiles = (
-                shard_cfg.num_tiles if num_tiles is None else num_tiles
-            )
-            self.shard_policy = (
-                shard_cfg.policy if shard_policy is None else shard_policy
-            )
-            if self.num_tiles > 1:
-                self.tiled, self.partition = self._index.sharded_corpus(
-                    self.num_tiles, self.shard_policy
-                )
-                self.corpus = None
-            else:
-                self.corpus = self._index.corpus()
-        if self.probe_tiles and self.num_tiles > 1 and \
-                self.shard_policy != "cluster":
-            import warnings
-
-            warnings.warn(
-                "probe_tiles routing assumes geometry-aware tiles "
-                "(shard_policy='cluster'); with hash/contiguous allocation "
-                "tile centroids are near-identical and routed recall "
-                "collapses", stacklevel=2,
-            )
+        self._stats = EngineStats()
         # warm the compile for the full-batch bucket (smaller power-of-two
         # buckets compile lazily on first use)
         dummy = np.zeros((batch_size, self.index.dataset.dim), np.float32)
-        self._search_batch(dummy)
+        self.searcher.search(SearchRequest(queries=dummy))
 
     def _bucket(self, n: int) -> int:
         """Smallest power-of-two >= n, capped at batch_size — the fixed set
@@ -172,81 +122,83 @@ class ServingEngine:
         varying queue depths never trigger a fresh jit compile)."""
         return min(next_pow2(max(n, 1)), self.batch_size)
 
+    # -------------------------------------------- plan-layer pass-throughs
+    @property
+    def mutable(self) -> Optional[MutableIndex]:
+        return self.searcher.mutable
+
     @property
     def index(self) -> ProximaIndex:
         """Current base index — always the mutable's latest after any
         consolidation (including capacity-forced ones inside insert)."""
-        return self.mutable.base if self.mutable is not None else self._index
+        return self.searcher.index
 
-    # ------------------------------------------------------------- search path
-    def _filter_plan(self, spec) -> dict:
-        """Cached per-spec plan for the frozen-index paths: compiled mask,
-        adapted config, per-tile mask slices (the mutable path recomputes —
-        its mask depends on the live tombstone set)."""
-        plan = self._filter_cache.get(spec)
-        if plan is None:
-            from repro.filter import adapt_search_cfg, tile_node_masks
+    @property
+    def cfg(self) -> SearchConfig:
+        return self.searcher.cfg
 
-            if self.attributes is None:
-                raise RuntimeError(
-                    "filtered submit() needs an attribute store — pass "
-                    "attributes= to ServingEngine or attach one to the index"
-                )
-            mask = self.attributes.mask(spec)
-            plan = {"mask": mask, "selectivity": float(mask.mean())}
-            if self.tiled is not None:
-                plan["node_masks"] = tile_node_masks(self.tiled.tile_ids, mask)
-                plan["cfg"] = adapt_search_cfg(
-                    self.cfg, plan["selectivity"], self.filter_cfg
-                )
-            self._filter_cache[spec] = plan
-        return plan
+    @property
+    def metric(self) -> str:
+        return self.searcher.metric
 
-    def _search_batch(self, q: np.ndarray, spec=None):
-        """(B, D) -> (ids, dists) through the merged, sharded or static
-        path; ``spec`` routes the batch through the filtered variant."""
-        if self.mutable is not None:
-            res = search_merged(self.mutable, q, self.cfg,
-                                probe_tiles=self.probe_tiles or None,
-                                filter_spec=spec)
-            return res.ids, res.dists
-        if self.tiled is not None:
-            from repro.shard import sharded_search
+    @property
+    def filter_cfg(self):
+        return self.searcher.filter_cfg
 
-            cfg, node_masks = self.cfg, None
-            if spec is not None:
-                plan = self._filter_plan(spec)
-                cfg, node_masks = plan["cfg"], plan["node_masks"]
-            res = sharded_search(
-                self.tiled, q, cfg, self.metric,
-                probe_tiles=self.probe_tiles or None,
-                node_masks=node_masks,
-            )
-            jax.block_until_ready(res.ids)
-            return np.asarray(res.ids), np.asarray(res.dists)
-        if spec is not None:
-            from repro.filter import filtered_search
+    @property
+    def attributes(self):
+        return self.searcher.attributes
 
-            plan = self._filter_plan(spec)
-            fres = filtered_search(self.corpus, q, plan["mask"], self.cfg,
-                                   self.metric, filter_cfg=self.filter_cfg)
-            if fres.mode == "scan":
-                self.stats["filter_scan_batches"] += 1
-            return fres.ids, fres.dists
-        res = search(self.corpus, q, self.cfg, self.metric)
-        jax.block_until_ready(res.ids)
-        return np.asarray(res.ids), np.asarray(res.dists)
+    @property
+    def tiled(self):
+        return self.searcher.tiled
+
+    @property
+    def corpus(self):
+        return self.searcher.corpus
+
+    @property
+    def num_tiles(self) -> int:
+        return self.searcher.num_tiles
+
+    @property
+    def shard_policy(self):
+        return self.searcher.shard_policy
+
+    @property
+    def probe_tiles(self) -> int:
+        return self.searcher.probe_tiles
+
+    @property
+    def stats(self) -> dict:
+        """Back-compat dict view, derived from the structured
+        ``EngineStats`` (plan-cache counters synced from the planner)."""
+        self._stats.plan_cache_hits = self.searcher.planner.plan_cache_hits
+        self._stats.plan_cache_misses = \
+            self.searcher.planner.plan_cache_misses
+        return self._stats.as_dict()
 
     # --------------------------------------------------------------- requests
-    def submit(self, query: np.ndarray, filter=None) -> int:
+    def submit(self, query: np.ndarray, filter: Optional[FilterSpec] = None,
+               ) -> int:
         """Queue one query; ``filter`` (a hashable ``FilterSpec``) restricts
-        results to attribute-passing nodes. Requests batch by filter hash."""
+        results to attribute-passing nodes. The request's ``QueryPlan`` is
+        compiled here (plan-cache hit for every repeated spec) and requests
+        batch by its cache key."""
         rid = self._next
         self._next += 1
         if filter is not None and getattr(filter, "is_all", False):
             filter = None                 # all-pass spec == unfiltered batch
-        self.queue.append(Request(rid=rid, query=np.asarray(query, np.float32),
-                                  t_submit=time.time(), filter=filter))
+        q = np.asarray(query, np.float32)
+        try:
+            plan = self.searcher.plan(SearchRequest(queries=q,
+                                                    filter=filter))
+        except RuntimeError:
+            # missing attribute store: accept the request and surface the
+            # error at flush time, like the legacy engine did
+            plan = None
+        self.queue.append(Request(rid=rid, query=q, t_submit=time.time(),
+                                  filter=filter, plan=plan))
         return rid
 
     def insert(self, vector: np.ndarray, attrs=None) -> int:
@@ -258,10 +210,10 @@ class ServingEngine:
                                "stream.MutableIndex for online updates")
         before = self.mutable.stats["consolidations"]
         ext = self.mutable.insert(vector, attrs=attrs)  # may consolidate
-        self.stats["consolidations"] += (
+        self._stats.consolidations += (
             self.mutable.stats["consolidations"] - before
         )
-        self.stats["inserts"] += 1
+        self._stats.inserts += 1
         return ext
 
     def delete(self, ext_id: int) -> bool:
@@ -271,7 +223,7 @@ class ServingEngine:
                                "stream.MutableIndex for online updates")
         ok = self.mutable.delete(ext_id)
         if ok:
-            self.stats["deletes"] += 1
+            self._stats.deletes += 1
         return ok
 
     # ------------------------------------------------------------- scheduling
@@ -295,20 +247,31 @@ class ServingEngine:
         """Run one batch if due; returns completed requests. In streaming
         mode, consolidation triggers between batches.
 
-        Batches are homogeneous in filter: the flush takes the head
-        request's ``FilterSpec`` and gathers (in FIFO order) only requests
-        sharing it — one compiled masked search serves the whole batch.
-        Other-filter requests keep their place at the front of the queue
-        for the next flush. With uniform filters (the common case, and
-        every unfiltered workload) this is plain FIFO batching."""
+        Batches are homogeneous in PLAN: the flush takes the head request's
+        plan cache key and gathers (in FIFO order) only requests sharing it
+        — one compiled execution serves the whole batch. Other-plan
+        requests keep their place at the front of the queue for the next
+        flush. With uniform filters (the common case, and every unfiltered
+        workload) this is plain FIFO batching."""
         if not (force and self.queue) and not self._flush_due():
             return []
-        spec = self.queue[0].filter
+        head = self.queue[0]
+        plan = head.plan
+        if plan is None:             # deferred planning error (e.g. filter
+            plan = self.searcher.plan(  # without a store) raises HERE
+                SearchRequest(queries=head.query, filter=head.filter))
+
+        def _key(r: Request):
+            return r.plan.cache_key if r.plan is not None \
+                else ("unplanned", r.filter)
+
+        key = plan.cache_key if head.plan is not None \
+            else ("unplanned", head.filter)
         batch: List[Request] = []
         skipped: List[Request] = []
         while self.queue and len(batch) < self.batch_size:
             r = self.queue.popleft()
-            (batch if r.filter == spec else skipped).append(r)
+            (batch if _key(r) == key else skipped).append(r)
         self.queue.extendleft(reversed(skipped))
         n = len(batch)
         q = np.stack([r.query for r in batch])
@@ -317,21 +280,24 @@ class ServingEngine:
             q = np.concatenate(
                 [q, np.zeros((bucket - n, q.shape[1]), np.float32)]
             )
-        ids, dists = self._search_batch(q, spec)
+        ex = self.searcher.execute(plan, q)
+        ids, dists = ex.ids, ex.dists
         now = time.time()
-        if spec is not None:
-            self.stats["filtered_queries"] += n
+        if plan.spec is not None:
+            self._stats.filtered_queries += n
+        if plan.kind == "flat" and plan.strategy == "scan":
+            self._stats.filter_scan_batches += 1
         for i, r in enumerate(batch):
             r.ids, r.dists, r.t_done = ids[i], dists[i], now
             self.done[r.rid] = r
         # running MEAN pad fraction over all batches (a sum would grow
         # without bound and read as >100% padding after a few batches)
-        b = self.stats["batches"]
-        self.stats["pad_fraction"] = (
-            self.stats["pad_fraction"] * b + (bucket - n) / bucket
+        b = self._stats.batches
+        self._stats.pad_fraction = (
+            self._stats.pad_fraction * b + (bucket - n) / bucket
         ) / (b + 1)
-        self.stats["batches"] = b + 1
-        self.stats["queries"] += n
+        self._stats.batches = b + 1
+        self._stats.queries += n
         if (
             self.auto_consolidate
             and self.mutable is not None
@@ -345,7 +311,7 @@ class ServingEngine:
         if self.mutable is None:
             return
         self.mutable.consolidate()
-        self.stats["consolidations"] += 1
+        self._stats.consolidations += 1
 
     def drain(self) -> List[Request]:
         out = []

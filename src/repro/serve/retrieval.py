@@ -58,7 +58,7 @@ class EmbeddingRetriever:
                                                reorder_samples=64)
 
     def query(self, q: np.ndarray, k: int = 10):
-        from repro.core import search
+        from repro.core import graph_search
         import dataclasses as dc
 
         qb = np.atleast_2d(np.asarray(q, np.float32))
@@ -71,7 +71,8 @@ class EmbeddingRetriever:
             self.index.config = dc.replace(self.index.config, dataset=ds_cfg)
             self.index.dataset.config = ds_cfg
         cfg = dc.replace(self.index.config.search, k=k)
-        res = search(self.index.corpus(), qb, cfg, self.index.dataset.metric)
+        res = graph_search(self.index.corpus(), qb, cfg,
+                           self.index.dataset.metric)
         ids = np.asarray(res.ids)
         # map back to pre-reorder corpus ids
         if self.index.reordering is not None:

@@ -9,6 +9,7 @@ from repro.shard.search import (
     cross_tile_merge,
     route_queries,
     sharded_search,
+    sharded_search_kernel,
 )
 
 __all__ = [
@@ -19,4 +20,5 @@ __all__ = [
     "cross_tile_merge",
     "route_queries",
     "sharded_search",
+    "sharded_search_kernel",
 ]

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import SearchConfig
 from repro.core.search import (
-    Corpus, SearchResult, empty_search_result, next_pow2, search,
+    Corpus, SearchResult, empty_search_result, graph_search, next_pow2,
 )
 from repro.shard.partition import TiledCorpus
 
@@ -96,7 +96,7 @@ def _fan_out(tiled: TiledCorpus, queries, cfg: SearchConfig, metric: str,
         axes = Corpus(adjacency=0, codes=0, base=0, centroids=None,
                       entry_point=0, hot_count=0)
         return jax.vmap(
-            lambda c, q: search(c, q, cfg, metric), in_axes=(axes, None)
+            lambda c, q: graph_search(c, q, cfg, metric), in_axes=(axes, None)
         )(corpus, queries)
     # unrolled fan-out: identical shapes across tiles -> one compiled
     # executable reused P times, and tiles early-terminate independently
@@ -109,7 +109,7 @@ def _fan_out(tiled: TiledCorpus, queries, cfg: SearchConfig, metric: str,
         if mask_p is not None and not mask_p.any():
             per.append(empty_search_result(queries.shape[0], cfg.k))
             continue
-        per.append(search(
+        per.append(graph_search(
             Corpus(
                 adjacency=tiled.adjacency[p], codes=tiled.codes[p],
                 base=tiled.base[p], centroids=tiled.centroids,
@@ -148,7 +148,7 @@ def route_queries(tiled: TiledCorpus, queries: jnp.ndarray,
     return mask.T                                      # (P, Q)
 
 
-def sharded_search(
+def sharded_search_kernel(
     tiled: TiledCorpus,
     queries,
     cfg: SearchConfig,
@@ -157,7 +157,8 @@ def sharded_search(
     probe_tiles: int | None = None,
     node_masks=None,
 ) -> ShardedSearchResult:
-    """Channel-parallel Proxima search: fan out over tiles, merge top-k.
+    """Channel-parallel Proxima search KERNEL: fan out over tiles, merge
+    top-k — the ``tiled`` execution spine of a ``repro.plan.QueryPlan``.
 
     ``use_vmap`` selects the fan-out style; by default the Pallas kernel
     path uses the unrolled loop (kernels stay at their compiled rank) and
@@ -217,3 +218,27 @@ def sharded_search(
                                       use_pallas=cfg.use_pallas)
     return ShardedSearchResult(ids=out_ids, dists=out_d, per_tile=per,
                                probed=probed)
+
+
+def sharded_search(
+    tiled: TiledCorpus,
+    queries,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    use_vmap: bool | None = None,
+    probe_tiles: int | None = None,
+    node_masks=None,
+) -> ShardedSearchResult:
+    """DEPRECATED entry point — builds a ``repro.plan.SearchRequest`` over
+    the tiled target and delegates to the ``Searcher`` facade (which calls
+    ``sharded_search_kernel`` with identical arguments, so results are
+    bit-identical).  ``node_masks`` are applied verbatim — config
+    adaptation stays the caller's job, exactly the legacy semantics."""
+    from repro.plan import Searcher, SearchRequest
+    from repro.plan.searcher import warn_legacy
+
+    warn_legacy("shard.sharded_search")
+    s = Searcher.open(tiled, cfg=cfg, metric=metric, use_vmap=use_vmap,
+                      probe_tiles=probe_tiles)
+    res = s.search(SearchRequest(queries=queries, node_mask=node_masks))
+    return res.raw

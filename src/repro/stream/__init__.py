@@ -13,6 +13,9 @@ Proxima base index.
 """
 from repro.stream.delta import DeltaSegment
 from repro.stream.mutable import MutableIndex
-from repro.stream.searcher import MergedResult, search_merged
+from repro.stream.searcher import (
+    MergedResult, merged_search_kernel, search_merged,
+)
 
-__all__ = ["DeltaSegment", "MutableIndex", "MergedResult", "search_merged"]
+__all__ = ["DeltaSegment", "MutableIndex", "MergedResult",
+           "merged_search_kernel", "search_merged"]

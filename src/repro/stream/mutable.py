@@ -266,6 +266,7 @@ class MutableIndex:
 
     # ---------------------------------------------------------------- search
     def search(self, queries: np.ndarray, cfg=None, filter_spec=None):
-        from repro.stream.searcher import search_merged
+        from repro.stream.searcher import merged_search_kernel
 
-        return search_merged(self, queries, cfg, filter_spec=filter_spec)
+        return merged_search_kernel(self, queries, cfg,
+                                    filter_spec=filter_spec)

@@ -30,7 +30,7 @@ from typing import NamedTuple, Optional, Union
 import numpy as np
 
 from repro.configs.base import FilterConfig, SearchConfig
-from repro.core.search import SearchResult, search
+from repro.core.search import SearchResult, graph_search
 
 
 class MergedResult(NamedTuple):
@@ -41,15 +41,26 @@ class MergedResult(NamedTuple):
                                 # this is shard.ShardedSearchResult (its
                                 # .per_tile counters feed the NAND model)
     delta_candidates: np.ndarray  # (Q,) delta candidates considered
+    selectivity: float = 1.0    # base admission-mask passing fraction
+                                # (1.0 unfiltered) — the plan layer's
+                                # billing input for merged executions
+    base_mode: str = "none"     # realized base filter regime: none |
+                                # traversal | scan | empty — scan's
+                                # candidate stream is the passing subset
+                                # itself, which the NAND pushdown billing
+                                # must not discount
 
 
-def search_merged(
+def merged_search_kernel(
     mutable,
     queries: np.ndarray,
     cfg: Optional[SearchConfig] = None,
     probe_tiles: Optional[int] = None,
     filter_spec=None,
 ) -> MergedResult:
+    """Base + delta merge KERNEL — the ``merged`` execution spine of a
+    ``repro.plan.QueryPlan`` (the admission mask depends on the live
+    tombstone set, so the filter regime is re-decided here per call)."""
     cfg = cfg or mutable.base.config.search
     k = cfg.k
     k_base = min(cfg.list_size, k + mutable.stream_cfg.base_overfetch)
@@ -61,8 +72,9 @@ def search_merged(
     fcfg = getattr(mutable.base.config, "filter", None) or FilterConfig()
 
     q = np.atleast_2d(np.asarray(queries, np.float32))
+    base_mode = "none" if base_mask is None else "traversal"
     if getattr(mutable, "num_tiles", 1) > 1:
-        from repro.shard import sharded_search
+        from repro.shard.search import sharded_search_kernel
 
         # tiled base: per-tile ids come back already mapped to the base
         # index's global (reordered-internal) id space, so the external-id
@@ -77,16 +89,19 @@ def search_merged(
             tiled_cfg = adapt_search_cfg(
                 base_cfg, float(base_mask.mean()), fcfg
             )
-        res = sharded_search(tiled, q, tiled_cfg, mutable.metric,
-                             probe_tiles=probe_tiles, node_masks=node_masks)
+        res = sharded_search_kernel(tiled, q, tiled_cfg, mutable.metric,
+                                    probe_tiles=probe_tiles,
+                                    node_masks=node_masks)
     elif base_mask is not None:
-        from repro.filter import filtered_search
+        from repro.plan.planner import flat_filtered_search
 
         # selectivity-adaptive base path (masked traversal / bitmap PQ scan)
-        res = filtered_search(mutable.corpus(), q, base_mask, base_cfg,
-                              mutable.metric, filter_cfg=fcfg).result
+        # through the plan layer's shared regime-decision point
+        fres = flat_filtered_search(mutable.corpus(), q, base_mask, base_cfg,
+                                    mutable.metric, filter_cfg=fcfg)
+        base_mode, res = fres.mode, fres.result
     else:
-        res = search(mutable.corpus(), q, base_cfg, mutable.metric)
+        res = graph_search(mutable.corpus(), q, base_cfg, mutable.metric)
     base_ids = np.asarray(res.ids)                    # (Q, k_base) internal
     base_d = np.asarray(res.dists)
 
@@ -138,5 +153,30 @@ def search_merged(
     out_d = np.take_along_axis(cand_d, order, 1).astype(np.float32)
     out_ids = np.take_along_axis(cand_ids, order, 1).astype(np.int32)
     out_ids = np.where(np.isfinite(out_d), out_ids, np.int32(-1))
-    return MergedResult(ids=out_ids, dists=out_d, base=res,
-                        delta_candidates=n_delta)
+    return MergedResult(
+        ids=out_ids, dists=out_d, base=res, delta_candidates=n_delta,
+        selectivity=1.0 if base_mask is None else float(base_mask.mean()),
+        base_mode=base_mode,
+    )
+
+
+def search_merged(
+    mutable,
+    queries: np.ndarray,
+    cfg: Optional[SearchConfig] = None,
+    probe_tiles: Optional[int] = None,
+    filter_spec=None,
+) -> MergedResult:
+    """DEPRECATED entry point — builds a ``repro.plan.SearchRequest`` over
+    the mutable index and delegates to the ``Searcher`` facade (which calls
+    ``merged_search_kernel`` with identical arguments, so results are
+    bit-identical)."""
+    from repro.plan import Searcher, SearchRequest
+    from repro.plan.searcher import warn_legacy
+
+    warn_legacy("stream.search_merged")
+    # probe_tiles=None meant "no routing" here (the engine, not this entry
+    # point, used to resolve the config default) — pin 0 to preserve that
+    s = Searcher.open(mutable, cfg=cfg,
+                      probe_tiles=0 if probe_tiles is None else probe_tiles)
+    return s.search(SearchRequest(queries=queries, filter=filter_spec)).raw
