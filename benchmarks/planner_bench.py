@@ -9,7 +9,10 @@ reports:
   * plan-cache hit rate (misses == distinct request shapes only),
   * mean ``plan()`` dispatch overhead per query, absolute and as a share of
     the measured batch search latency — acceptance bar: **< 5%** (asserted,
-    so a planner regression fails the bench-smoke CI job loudly).
+    so a planner regression fails the bench-smoke CI job loudly),
+  * enabled-observability tax: the same dispatch stream against an
+    obs-enabled searcher — the ADDED cost must also stay **< 5%** of batch
+    latency (asserted; the zero-cost-when-off contract, measured when on).
 
 ``--smoke`` shrinks the request count for CI.
 
@@ -23,6 +26,7 @@ import time
 from benchmarks.common import get_index
 from repro.configs.base import SearchConfig
 from repro.filter import FilterSpec, attach_attributes, random_attributes
+from repro.obs import Observability
 from repro.plan import Searcher, SearchRequest
 
 PRICE_CARD = 1000
@@ -72,11 +76,31 @@ def main(out=print, smoke: bool = False) -> None:
         f"overhead_us_per_query={per_query_overhead * 1e6:.3f};"
         f"batch_us={batch_s * 1e6:.0f};overhead_share={share:.5f}")
 
+    # ---- observability tax: same dispatch stream, obs-enabled searcher ----
+    obs = Observability.on(tracing=False, nand_billing=False)
+    searcher_obs = Searcher.open(idx, cfg=cfg, obs=obs)
+    for r in requests[:3]:
+        searcher_obs.plan(r)                             # warm the plan cache
+    t0 = time.time()
+    for r in requests:
+        searcher_obs.plan(r)
+    plan_obs_s = (time.time() - t0) / len(requests)
+    # normalize the delta by BATCH latency, not by the microsecond-scale
+    # dispatch itself — two tiny timings compared directly are runner noise
+    obs_share = (plan_obs_s - plan_s) / max(batch_s, 1e-12)
+
+    out(f"planner/obs_tax,{plan_obs_s * 1e6:.2f},"
+        f"disabled_us={plan_s * 1e6:.2f};"
+        f"obs_share_of_batch={obs_share:.5f}")
+
     # the redesign's acceptance bars — fail the smoke job loudly
     assert misses == 0, f"plan cache missed {misses}x on repeated requests"
     assert hit_rate >= 0.99, f"plan-cache hit rate {hit_rate:.3f} < 0.99"
     assert share < 0.05, (
         f"plan dispatch is {share:.1%} of batch latency (bar: < 5%)")
+    assert obs_share < 0.05, (
+        f"enabled observability adds {obs_share:.1%} of batch latency to "
+        f"dispatch (bar: < 5%)")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ MODULES = [
     "beam_bench",
     "filtered_bench",
     "planner_bench",
+    "serving_bench",
     "kernels_bench",
     "roofline_bench",
 ]

@@ -1,0 +1,116 @@
+"""Serving-path observability snapshot — the perf-trajectory artifact.
+
+Runs the batched ``ServingEngine`` over the benchmark corpus with the full
+observability bundle on (metrics + tracing + NAND billing), then writes the
+headline serving numbers as ``BENCH_serving.json``:
+
+  * end-to-end request latency p50/p95/p99 and queue-wait p50 (ms),
+  * recall@10 of the served results against exact ground truth,
+  * plan-cache hit rate over the run,
+  * modeled NAND cost per query (pJ/query, latency us) from the per-batch
+    cost-accounting bridge,
+  * batch occupancy and jit-cache growth (the pow2-bucket contract).
+
+CI's bench-smoke job keeps the JSON as an artifact, so serving regressions
+show up as a trajectory, not an anecdote.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import get_index
+from repro.obs import Observability
+from repro.serve import ServingEngine
+
+DEFAULT_JSON = "BENCH_serving.json"
+
+
+def _recall_at_k(done, rids, gt, k: int) -> float:
+    hits = 0
+    for qi, rid in enumerate(rids):
+        got = set(int(i) for i in done[rid].ids[:k] if i >= 0)
+        hits += len(got & set(int(i) for i in gt[qi, :k]))
+    return hits / (len(rids) * k)
+
+
+def main(out=print, smoke: bool = False, json_path: str | None = None) -> None:
+    idx = get_index("sift-like")
+    obs = Observability.on(tracing=True, nand_billing=True)
+    eng = ServingEngine(idx, batch_size=16, flush_us=0.0, obs=obs)
+    q = idx.dataset.queries
+    gt = np.asarray(idx.dataset.gt)
+    k = min(10, gt.shape[1])
+
+    passes = 1 if smoke else 4
+    rids_first: list[int] = []
+    for p in range(passes):
+        rids = [eng.submit(qq) for qq in q]
+        eng.drain()
+        if p == 0:
+            rids_first = rids
+    recall = _recall_at_k(eng.done, rids_first, gt, k)
+
+    m = obs.metrics
+    lat = m.merged_histogram("request_latency_ms")
+    wait = m.merged_histogram("queue_wait_ms")
+    hits = m.counter_total("plan_cache_hits")
+    misses = m.counter_total("plan_cache_misses")
+    hit_rate = hits / max(hits + misses, 1)
+    pj = m.merged_histogram("nand_pj_per_query")
+    nand_lat = m.merged_histogram("nand_latency_us")
+    growth = m.gauge_value("jit_cache_growth", kernel="graph_search")
+
+    payload = {
+        "dataset": "sift-like",
+        "queries_served": int(eng.stats["queries"]),
+        "batches": int(eng.stats["batches"]),
+        "recall_at_k": recall,
+        "k": k,
+        "latency_ms": {"p50": lat.quantile(50), "p95": lat.quantile(95),
+                       "p99": lat.quantile(99), "mean": lat.mean},
+        "queue_wait_ms_p50": wait.quantile(50),
+        "plan_cache_hit_rate": hit_rate,
+        "nand_pj_per_query": pj.mean if pj is not None else None,
+        "nand_latency_us": nand_lat.mean if nand_lat is not None else None,
+        "batch_occupancy": m.gauge_value("batch_occupancy"),
+        "jit_cache_growth": growth,
+        "unexpected_recompiles": m.counter_total("unexpected_recompiles"),
+    }
+    path = json_path or DEFAULT_JSON
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+    out(f"serving/latency,{lat.mean * 1e3:.2f},"
+        f"p50_ms={lat.quantile(50):.3f};p99_ms={lat.quantile(99):.3f};"
+        f"recall@{k}={recall:.3f}")
+    out(f"serving/plan_cache,{0.0:.2f},"
+        f"hit_rate={hit_rate:.4f};queue_wait_p50_ms={wait.quantile(50):.3f}")
+    out(f"serving/nand_model,{nand_lat.mean if nand_lat else 0.0:.2f},"
+        f"pj_per_query={pj.mean if pj else 0.0:.1f};"
+        f"jit_cache_growth={growth}")
+
+    # serving sanity bars — a broken engine must fail the smoke job
+    assert recall >= 0.6, f"served recall@{k} collapsed: {recall:.3f}"
+    assert hit_rate >= 0.9, f"plan-cache hit rate {hit_rate:.3f} < 0.9"
+    assert m.counter_total("unexpected_recompiles") == 0, \
+        "serving defeated the pow2-bucket compile cache"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single pass over the query set (CI smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help=f"snapshot output path (default {DEFAULT_JSON})")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke, json_path=args.json)

@@ -18,6 +18,7 @@ from repro.configs.base import (
 from repro.core import build_index, recall_at_k
 from repro.core.dataset import exact_knn
 from repro.filter import FilterSpec, attach_attributes, random_attributes
+from repro.obs import Observability
 from repro.plan import Searcher, SearchRequest
 from repro.serve.engine import ServingEngine
 
@@ -44,7 +45,9 @@ res = searcher.search(SearchRequest(queries=idx.dataset.queries[:8]))
 print(f"direct search: plan={res.plan.kind}/{res.plan.strategy} "
       f"rounds/query {res.stats.rounds:.1f} hops/query {res.stats.hops:.1f}")
 
-eng = ServingEngine(idx, batch_size=32)
+# full observability: metrics registry + Chrome trace + per-batch NAND billing
+obs = Observability.on(tracing=True, nand_billing=True)
+eng = ServingEngine(idx, batch_size=32, obs=obs)
 
 print("serving 192 requests (open loop, bursty arrivals) ...")
 t0 = time.time()
@@ -89,3 +92,19 @@ print(f"filter selectivity {mask.mean():.3f} ({int(mask.sum())} passing) | "
       f"filtered queries {eng.stats['filtered_queries']} | "
       f"plan cache {eng.stats['plan_cache_hits']} hits / "
       f"{eng.stats['plan_cache_misses']} misses")
+
+# --- observability: the same run, as measured by the engine itself ----------
+m = obs.metrics
+lat = m.merged_histogram("request_latency_ms")
+wait = m.merged_histogram("queue_wait_ms")
+pj = m.merged_histogram("nand_pj_per_query")
+print("\nobservability snapshot (engine-measured):")
+print(f"  latency p50 {lat.quantile(50):.1f}ms p95 {lat.quantile(95):.1f}ms "
+      f"p99 {lat.quantile(99):.1f}ms | queue-wait p50 {wait.quantile(50):.1f}ms")
+print(f"  NAND model: {pj.mean/1e6:.2f} uJ/query | "
+      f"plan cache hits {m.counter_total('plan_cache_hits'):.0f} | "
+      f"batch occupancy {m.gauge_value('batch_occupancy'):.0%}")
+m.to_json("serving_metrics.json")
+obs.tracer.export("serving_trace.json")
+print("  wrote serving_metrics.json + serving_trace.json "
+      "(open the trace in chrome://tracing or ui.perfetto.dev)")

@@ -11,6 +11,7 @@ from repro.configs.base import (  # noqa: F401  (re-exported)
     DatasetConfig,
     GraphConfig,
     ModelConfig,
+    ObsConfig,
     PQConfig,
     ProximaConfig,
     SearchConfig,

@@ -293,6 +293,17 @@ class FilterConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Observability switches (``repro.obs``) — all OFF by default, so the
+    serving hot path pays only a no-op branch per instrumented call site.
+    ``Observability.resolve`` turns this into a live registry/tracer bundle
+    (``ServingEngine(obs=ObsConfig(metrics=True, ...))``)."""
+    metrics: bool = False             # counters / gauges / histograms
+    tracing: bool = False             # per-request Chrome trace-event spans
+    nand_billing: bool = False        # per-batch simulated NAND cost export
+
+
+@dataclass(frozen=True)
 class PlanConfig:
     """Query-plan layer parameters (``repro.plan``) — the single config the
     ``Searcher`` facade consumes, collapsing what used to be per-feature

@@ -437,6 +437,16 @@ if hasattr(graph_search, "_cache_size"):
     search._cache_size = graph_search._cache_size
 
 
+def jit_cache_sizes() -> dict:
+    """Executable-cache entry counts of the stack's jitted kernels — the
+    recompile detector's input (``repro.obs.KernelWatch``).  Empty when the
+    jax build exposes no ``_cache_size`` introspection."""
+    out = {}
+    if hasattr(graph_search, "_cache_size"):
+        out["graph_search"] = int(graph_search._cache_size())
+    return out
+
+
 # ---------------------------------------------------------------------------
 # NumPy reference (direct Algorithm-1 transliteration) — the test oracle
 # ---------------------------------------------------------------------------

@@ -109,6 +109,21 @@ class SimResult:
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    def metrics(self) -> dict:
+        """Flat name -> value mapping for the observability registry
+        (``repro.obs.record_plan_execution``): the per-query cost figures
+        serving snapshots report next to host wall-time percentiles.
+        ``nand_pj_per_query`` is TOTAL power (NAND array + CMOS engine)
+        amortized per query at the modeled QPS."""
+        return {
+            "nand_latency_us": self.latency_us,
+            "nand_model_qps": self.qps,
+            "nand_power_w": self.power_w,
+            "nand_pj_per_query": self.power_w / max(self.qps, 1e-12) * 1e12,
+            "nand_transfer_pj_per_query": self.transfer_pj_per_query,
+            "nand_core_utilization": self.core_utilization,
+        }
+
 
 def _transfer_pj(traffic: Dict[str, float], nand: NandConfig) -> float:
     """Channel-transfer energy of the per-query H-tree traffic (continuous

@@ -1,0 +1,53 @@
+"""NAND cost-accounting bridge — simulated hardware cost into the registry.
+
+Proxima's claims are about where energy and time go in the 3D NAND array;
+the serving stack's claims are about host wall-time.  This bridge puts both
+in ONE snapshot: after each executed batch, the plan execution's measured
+counters are converted to a ``nand.simulator.WorkloadTrace`` (via
+``trace_from_plan_execution`` — billing facts read off the plan) and run
+through the analytic simulator, and the resulting per-query energy/latency/
+transfer figures are recorded next to the host-side queue-wait and latency
+histograms, labeled by plan kind / filter strategy / tenant.
+
+Unbillable executions (distributed plans carry no NAND counters; targets
+opened without geometry) record a ``nand_unbilled_batches`` counter instead
+of raising — observability must never fail the serving path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def record_plan_execution(metrics, pres, *, index=None, nand=None, eng=None,
+                          batch_queries: Optional[int] = None):
+    """Bill one plan-layer ``SearchResult`` into ``metrics``.
+
+    ``index`` resolves trace geometry (the served ``ProximaIndex`` /
+    ``MutableIndex``); ``nand``/``eng`` override the simulator configs.
+    Returns the ``SimResult`` (or None when the execution is unbillable).
+    """
+    if not getattr(metrics, "enabled", False):
+        return None
+    from repro.nand.simulator import simulate, trace_from_plan_execution
+
+    plan = pres.plan
+    labels = dict(kind=plan.kind, strategy=plan.strategy, tenant=plan.tenant)
+    try:
+        trace = trace_from_plan_execution(pres, index=index)
+    except ValueError:
+        metrics.counter("nand_unbilled_batches", **labels)
+        return None
+    kwargs = {}
+    if nand is not None:
+        kwargs["nand"] = nand
+    if eng is not None:
+        kwargs["eng"] = eng
+    sim = simulate(trace, **kwargs)
+    for name, value in sim.metrics().items():
+        metrics.observe(name, value, **labels)
+    for category, nbytes in sim.traffic_bytes_per_query.items():
+        metrics.counter("nand_traffic_bytes", nbytes, category=category,
+                        **labels)
+    n = batch_queries if batch_queries is not None else pres.stats.queries
+    metrics.counter("nand_billed_queries", n, **labels)
+    return sim

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.configs.base import FilterConfig, PlanConfig, SearchConfig
 from repro.filter.spec import FilterSpec
+from repro.obs import NULL_OBS, Observability
 from repro.plan.request import SearchRequest, SearchStats
 
 
@@ -152,6 +153,7 @@ class QueryPlanner:
         mesh=None,
         attributes=None,
         probe_tiles: int = 0,
+        obs: Optional[Observability] = None,
     ):
         self.capabilities = capabilities
         self.cfg = cfg
@@ -171,6 +173,7 @@ class QueryPlanner:
         self._mask_tokens = 0
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
+        self.obs = obs or NULL_OBS
 
     # ------------------------------------------------------------- planning
     def plan(self, request: SearchRequest) -> QueryPlan:
@@ -187,10 +190,19 @@ class QueryPlanner:
         cached = self._plan_cache.get(key)
         if cached is not None:
             self.plan_cache_hits += 1
+            if self.obs.enabled:
+                self.obs.metrics.counter("plan_cache_hits",
+                                         tenant=request.tenant)
             return cached
         self.plan_cache_misses += 1
         plan = self._compile(spec, request)
         self._plan_cache[key] = plan
+        if self.obs.enabled:
+            self.obs.metrics.counter("plan_cache_misses",
+                                     tenant=request.tenant)
+            self.obs.metrics.counter("plans_compiled", kind=plan.kind,
+                                     strategy=plan.strategy,
+                                     tenant=request.tenant)
         return plan
 
     def _effective_cfg(self, request: SearchRequest) -> SearchConfig:
@@ -348,7 +360,32 @@ class QueryPlanner:
     def execute(self, plan: QueryPlan, queries) -> Execution:
         """Run one compiled plan over a query batch — dispatching to the
         SAME kernels, with the SAME arguments, as the legacy entry point the
-        plan replaces (the bit-identity contract)."""
+        plan replaces (the bit-identity contract).
+
+        With observability enabled the dispatch is wrapped in a
+        ``kernel-execute`` span and billed into ``kernel_execute_ms``
+        (labeled by plan kind / filter strategy / tenant); the traversal
+        rounds inside the compiled while_loop are not individually
+        observable, so the span carries the whole device execution."""
+        obs = self.obs
+        if not obs.enabled:
+            return self._execute_plan(plan, queries)
+        import time as _time
+
+        t0 = _time.perf_counter()
+        with obs.tracer.span("kernel-execute", kind=plan.kind,
+                             strategy=plan.strategy) as sp:
+            ex = self._execute_plan(plan, queries)
+            sp.set(queries=int(np.atleast_2d(np.asarray(ex.ids)).shape[0]))
+        obs.metrics.observe(
+            "kernel_execute_ms", (_time.perf_counter() - t0) * 1e3,
+            kind=plan.kind, strategy=plan.strategy, tenant=plan.tenant,
+        )
+        obs.metrics.counter("kernel_executions", kind=plan.kind,
+                            strategy=plan.strategy, tenant=plan.tenant)
+        return ex
+
+    def _execute_plan(self, plan: QueryPlan, queries) -> Execution:
         import jax
         import jax.numpy as jnp
 

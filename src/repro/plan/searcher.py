@@ -27,21 +27,36 @@ from typing import Any, Optional
 from repro.configs.base import (
     FilterConfig, PlanConfig, SearchConfig, ShardConfig,
 )
+from repro.obs import Observability
 from repro.plan.planner import (
     Execution, IndexCapabilities, QueryPlan, QueryPlanner,
 )
 from repro.plan.request import SearchRequest, SearchResult
 
+# legacy entry points that already warned this process — benchmark/serving
+# loops hammer the deprecated wrappers thousands of times, and one warning
+# per entry point is signal where one per call is stderr spam
+_warned_legacy: set = set()
+
 
 def warn_legacy(old: str, new: str = "repro.plan.Searcher.search") -> None:
-    """One DeprecationWarning per legacy call site — the five pre-plan entry
-    points are kept as thin wrappers that build a request and delegate."""
+    """One DeprecationWarning per legacy ENTRY POINT per process — the five
+    pre-plan entry points are kept as thin wrappers that build a request and
+    delegate.  ``reset_legacy_warnings`` re-arms them (tests)."""
+    if old in _warned_legacy:
+        return
+    _warned_legacy.add(old)
     warnings.warn(
         f"{old} is a deprecated entry point kept for compatibility; build a "
         f"SearchRequest and call {new} instead (see README 'query plan "
         f"layer')",
         DeprecationWarning, stacklevel=3,
     )
+
+
+def reset_legacy_warnings() -> None:
+    """Re-arm every deduplicated deprecation warning (test helper)."""
+    _warned_legacy.clear()
 
 
 def validate_attribute_store(store, expected_rows: int, owner: str):
@@ -85,12 +100,19 @@ class Searcher:
              mesh=None,
              mode: Optional[str] = None,
              data_axis: Optional[str] = None,
-             queue_axis: Optional[str] = None) -> "Searcher":
+             queue_axis: Optional[str] = None,
+             obs=None) -> "Searcher":
         """Open a search target.  Keyword arguments override the matching
         ``PlanConfig`` fields; unset fields defer to the index's own
         ``ProximaConfig`` sections, so ``Searcher.open(index)`` reproduces
-        the index's configured serving mode exactly."""
+        the index's configured serving mode exactly.
+
+        ``obs`` takes an :class:`repro.obs.Observability` bundle (or an
+        ``ObsConfig``); the planner then bills plan-cache traffic and wraps
+        kernel execution in spans/histograms.  ``None`` (default) keeps the
+        shared no-op bundle — zero overhead."""
         pc = plan or PlanConfig()
+        obs = Observability.resolve(obs)
         kw = dict(search=cfg, num_tiles=num_tiles, shard_policy=shard_policy,
                   probe_tiles=probe_tiles, beam_width=beam_width,
                   filter=filter_cfg, bloom_bits=bloom_bits,
@@ -102,14 +124,14 @@ class Searcher:
         from repro.core.search import Corpus
 
         if mesh is not None or _is_sharded_corpus(index):
-            return cls._open_distributed(index, pc, metric, mesh)
+            return cls._open_distributed(index, pc, metric, mesh, obs)
         if _is_mutable(index):
-            return cls._open_mutable(index, pc, metric, attributes)
+            return cls._open_mutable(index, pc, metric, attributes, obs)
         if isinstance(index, Corpus):
-            return cls._open_corpus(index, pc, metric, attributes)
+            return cls._open_corpus(index, pc, metric, attributes, obs)
         if _is_tiled(index):
-            return cls._open_tiled(index, pc, metric, attributes)
-        return cls._open_index(index, pc, metric, attributes)
+            return cls._open_tiled(index, pc, metric, attributes, obs)
+        return cls._open_index(index, pc, metric, attributes, obs)
 
     # -- target-specific constructors (mirror the legacy engine branches) ----
     @classmethod
@@ -130,7 +152,7 @@ class Searcher:
             )
 
     @classmethod
-    def _open_index(cls, index, pc, metric, attributes):
+    def _open_index(cls, index, pc, metric, attributes, obs):
         scfg = cls._resolve_cfg(pc, index.config.search)
         metric = metric or index.dataset.metric
         fcfg = pc.filter or getattr(index.config, "filter", None) \
@@ -158,13 +180,13 @@ class Searcher:
         planner = QueryPlanner(
             capabilities=caps, cfg=scfg, metric=metric, filter_cfg=fcfg,
             plan_cfg=pc, corpus=corpus, tiled=tiled, attributes=attributes,
-            probe_tiles=probe,
+            probe_tiles=probe, obs=obs,
         )
         return cls(planner=planner, plan_cfg=pc, index=index,
                    num_tiles=n_tiles, shard_policy=policy)
 
     @classmethod
-    def _open_mutable(cls, mutable, pc, metric, attributes):
+    def _open_mutable(cls, mutable, pc, metric, attributes, obs):
         base = mutable.base
         scfg = cls._resolve_cfg(pc, base.config.search)
         metric = metric or base.dataset.metric
@@ -196,25 +218,27 @@ class Searcher:
         planner = QueryPlanner(
             capabilities=caps, cfg=scfg, metric=metric, filter_cfg=fcfg,
             plan_cfg=pc, mutable=mutable, attributes=mutable.attributes,
-            probe_tiles=probe,
+            probe_tiles=probe, obs=obs,
         )
+        if obs.enabled:
+            mutable.obs = obs      # stream path: insert/consolidate spans
         return cls(planner=planner, plan_cfg=pc, index=mutable,
                    num_tiles=n_tiles, shard_policy=policy)
 
     @classmethod
-    def _open_corpus(cls, corpus, pc, metric, attributes):
+    def _open_corpus(cls, corpus, pc, metric, attributes, obs):
         scfg = cls._resolve_cfg(pc, pc.search or SearchConfig())
         caps = IndexCapabilities(kind="flat",
                                  has_attributes=attributes is not None)
         planner = QueryPlanner(
             capabilities=caps, cfg=scfg, metric=metric or "l2",
             filter_cfg=pc.filter or FilterConfig(), plan_cfg=pc,
-            corpus=corpus, attributes=attributes,
+            corpus=corpus, attributes=attributes, obs=obs,
         )
         return cls(planner=planner, plan_cfg=pc)
 
     @classmethod
-    def _open_tiled(cls, tiled, pc, metric, attributes):
+    def _open_tiled(cls, tiled, pc, metric, attributes, obs):
         scfg = cls._resolve_cfg(pc, pc.search or SearchConfig())
         probe = pc.probe_tiles or 0
         caps = IndexCapabilities(kind="tiled", tiled=True,
@@ -223,13 +247,13 @@ class Searcher:
         planner = QueryPlanner(
             capabilities=caps, cfg=scfg, metric=metric or "l2",
             filter_cfg=pc.filter or FilterConfig(), plan_cfg=pc,
-            tiled=tiled, attributes=attributes, probe_tiles=probe,
+            tiled=tiled, attributes=attributes, probe_tiles=probe, obs=obs,
         )
         return cls(planner=planner, plan_cfg=pc,
                    num_tiles=tiled.num_tiles)
 
     @classmethod
-    def _open_distributed(cls, dcorpus, pc, metric, mesh):
+    def _open_distributed(cls, dcorpus, pc, metric, mesh, obs):
         if mesh is None:
             raise ValueError("distributed targets need mesh=")
         scfg = cls._resolve_cfg(pc, pc.search or SearchConfig())
@@ -240,7 +264,7 @@ class Searcher:
         planner = QueryPlanner(
             capabilities=caps, cfg=scfg, metric=metric or "l2",
             filter_cfg=pc.filter or FilterConfig(), plan_cfg=pc,
-            dcorpus=dcorpus, mesh=mesh,
+            dcorpus=dcorpus, mesh=mesh, obs=obs,
         )
         return cls(planner=planner, plan_cfg=pc,
                    num_tiles=getattr(dcorpus, "num_shards", 1))
@@ -298,6 +322,10 @@ class Searcher:
     @property
     def probe_tiles(self) -> int:
         return self.planner.probe_tiles
+
+    @property
+    def obs(self) -> Observability:
+        return self.planner.obs
 
     @property
     def index(self):

@@ -24,10 +24,26 @@ All per-feature constructor kwargs (num_tiles / shard_policy / probe_tiles
 / beam_width) are legacy sugar folded into one ``PlanConfig``; the ad-hoc
 per-spec ``_filter_cache`` is gone — compiled masks live in the planner's
 artifact cache, keyed by plan.
+
+Observability (``repro.obs``): pass ``obs=Observability.on()`` (or an
+``ObsConfig``) and the engine records queue-wait / end-to-end latency
+histograms and a batch-occupancy gauge labeled by plan kind / filter
+strategy / tenant, emits per-request ``queue-wait`` async trace spans
+nested over each flush's ``batch`` > ``batch-assembly`` / ``kernel-execute``
+/ ``post-process`` spans, watches the jit caches for unexpected recompiles
+(budget: pow2 buckets x distinct executed plans), and — with
+``nand_billing`` — bills every flushed batch through the NAND cost model
+into the same registry.  The default is the shared no-op bundle: one
+predictable branch per call site, no allocation, no timing.
+
+All engine timing uses ``time.perf_counter()`` — the monotonic clock;
+``time.time()`` is wall-clock and jumps under NTP step corrections, which
+produced negative latencies and spurious/missed flush timeouts.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Union
@@ -38,6 +54,7 @@ from repro.configs.base import PlanConfig, SearchConfig
 from repro.core.index import ProximaIndex
 from repro.core.search import next_pow2
 from repro.filter.spec import FilterSpec
+from repro.obs import KernelWatch, Observability, record_plan_execution
 from repro.plan import QueryPlan, Searcher, SearchRequest
 from repro.stream.mutable import MutableIndex
 
@@ -75,8 +92,9 @@ class EngineStats:
     consolidations: int = 0
     filtered_queries: int = 0
     filter_scan_batches: int = 0
-    plan_cache_hits: int = 0         # synced from the planner at read time
-    plan_cache_misses: int = 0
+    # plan_cache_hits / plan_cache_misses intentionally live on the PLANNER
+    # (the component that owns the cache); ``ServingEngine.stats`` merges
+    # them into the dict view at read time instead of hand-syncing fields
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -96,6 +114,7 @@ class ServingEngine:
         beam_width: Optional[int] = None,
         attributes=None,
         plan: Optional[PlanConfig] = None,
+        obs=None,
     ):
         pcfg = plan or PlanConfig()
         legacy = dict(search=cfg, num_tiles=num_tiles,
@@ -103,7 +122,9 @@ class ServingEngine:
                       beam_width=beam_width)
         pcfg = dataclasses.replace(
             pcfg, **{k: v for k, v in legacy.items() if v is not None})
-        self.searcher = Searcher.open(index, pcfg, attributes=attributes)
+        self.obs = Observability.resolve(obs)
+        self.searcher = Searcher.open(index, pcfg, attributes=attributes,
+                                      obs=self.obs)
         self.batch_size = batch_size
         self.flush_us = flush_us
         self.auto_consolidate = auto_consolidate
@@ -111,10 +132,17 @@ class ServingEngine:
         self.done: Dict[int, Request] = {}
         self._next = 0
         self._stats = EngineStats()
+        self._plan_keys_seen: set = set()    # recompile-budget denominator
+        if self.obs.enabled:
+            self.obs.install_kernel_hooks()
         # warm the compile for the full-batch bucket (smaller power-of-two
         # buckets compile lazily on first use)
         dummy = np.zeros((batch_size, self.index.dataset.dim), np.float32)
         self.searcher.search(SearchRequest(queries=dummy))
+        # recompile watchdog baselined AFTER warm-up, so only serving-time
+        # jit-cache growth is judged against the pow2-bucket x plan budget
+        self._watch = KernelWatch(self.obs.metrics) \
+            if self.obs.metrics.enabled else None
 
     def _bucket(self, n: int) -> int:
         """Smallest power-of-two >= n, capped at batch_size — the fixed set
@@ -172,11 +200,11 @@ class ServingEngine:
     @property
     def stats(self) -> dict:
         """Back-compat dict view, derived from the structured
-        ``EngineStats`` (plan-cache counters synced from the planner)."""
-        self._stats.plan_cache_hits = self.searcher.planner.plan_cache_hits
-        self._stats.plan_cache_misses = \
-            self.searcher.planner.plan_cache_misses
-        return self._stats.as_dict()
+        ``EngineStats`` with the planner's plan-cache counters merged in
+        at read time (the planner owns the cache; nothing is hand-synced)."""
+        d = self._stats.as_dict()
+        d.update(self.searcher.plan_cache_stats())
+        return d
 
     # --------------------------------------------------------------- requests
     def submit(self, query: np.ndarray, filter: Optional[FilterSpec] = None,
@@ -190,15 +218,23 @@ class ServingEngine:
         if filter is not None and getattr(filter, "is_all", False):
             filter = None                 # all-pass spec == unfiltered batch
         q = np.asarray(query, np.float32)
-        try:
-            plan = self.searcher.plan(SearchRequest(queries=q,
-                                                    filter=filter))
-        except RuntimeError:
-            # missing attribute store: accept the request and surface the
-            # error at flush time, like the legacy engine did
-            plan = None
-        self.queue.append(Request(rid=rid, query=q, t_submit=time.time(),
+        obs = self.obs
+        with obs.tracer.span("plan-lookup", rid=rid):
+            try:
+                plan = self.searcher.plan(SearchRequest(queries=q,
+                                                        filter=filter))
+            except RuntimeError:
+                # missing attribute store: accept the request and surface the
+                # error at flush time, like the legacy engine did
+                plan = None
+        self.queue.append(Request(rid=rid, query=q,
+                                  t_submit=time.perf_counter(),
                                   filter=filter, plan=plan))
+        if obs.enabled:
+            # queue residency is an async span: many requests overlap, so a
+            # synchronous nested span on one track cannot represent it
+            obs.tracer.async_begin("queue-wait", rid)
+            obs.metrics.gauge("queue_depth", float(len(self.queue)))
         return rid
 
     def insert(self, vector: np.ndarray, attrs=None) -> int:
@@ -240,7 +276,8 @@ class ServingEngine:
             return True
         return (
             bool(self.queue)
-            and (time.time() - self.queue[0].t_submit) * 1e6 >= self.flush_us
+            and (time.perf_counter() - self.queue[0].t_submit) * 1e6
+            >= self.flush_us
         )
 
     def step(self, force: bool = False) -> List[Request]:
@@ -267,29 +304,72 @@ class ServingEngine:
 
         key = plan.cache_key if head.plan is not None \
             else ("unplanned", head.filter)
-        batch: List[Request] = []
-        skipped: List[Request] = []
-        while self.queue and len(batch) < self.batch_size:
-            r = self.queue.popleft()
-            (batch if _key(r) == key else skipped).append(r)
-        self.queue.extendleft(reversed(skipped))
-        n = len(batch)
-        q = np.stack([r.query for r in batch])
-        bucket = self._bucket(n)
-        if n < bucket:  # pad to the bucket's compiled shape
-            q = np.concatenate(
-                [q, np.zeros((bucket - n, q.shape[1]), np.float32)]
-            )
-        ex = self.searcher.execute(plan, q)
-        ids, dists = ex.ids, ex.dists
-        now = time.time()
-        if plan.spec is not None:
-            self._stats.filtered_queries += n
-        if plan.kind == "flat" and plan.strategy == "scan":
-            self._stats.filter_scan_batches += 1
-        for i, r in enumerate(batch):
-            r.ids, r.dists, r.t_done = ids[i], dists[i], now
-            self.done[r.rid] = r
+        obs = self.obs
+        with obs.tracer.span("batch", kind=plan.kind,
+                             strategy=plan.strategy) as bsp:
+            with obs.tracer.span("batch-assembly"):
+                batch: List[Request] = []
+                skipped: List[Request] = []
+                while self.queue and len(batch) < self.batch_size:
+                    r = self.queue.popleft()
+                    (batch if _key(r) == key else skipped).append(r)
+                self.queue.extendleft(reversed(skipped))
+                n = len(batch)
+                t_assembled = time.perf_counter()
+                if obs.enabled:
+                    for r in batch:
+                        # the request leaves the queue here — close its
+                        # async residency span and bill queue-wait
+                        obs.tracer.async_end("queue-wait", r.rid)
+                        obs.metrics.observe(
+                            "queue_wait_ms",
+                            (t_assembled - r.t_submit) * 1e3,
+                            kind=plan.kind, strategy=plan.strategy,
+                            tenant=plan.tenant,
+                        )
+                q = np.stack([r.query for r in batch])
+                bucket = self._bucket(n)
+                if n < bucket:  # pad to the bucket's compiled shape
+                    q = np.concatenate(
+                        [q, np.zeros((bucket - n, q.shape[1]), np.float32)]
+                    )
+            ex = self.searcher.execute(plan, q)   # kernel-execute span inside
+            now = time.perf_counter()
+            with obs.tracer.span("post-process"):
+                ids, dists = ex.ids, ex.dists
+                if plan.spec is not None:
+                    self._stats.filtered_queries += n
+                if plan.kind == "flat" and plan.strategy == "scan":
+                    self._stats.filter_scan_batches += 1
+                for i, r in enumerate(batch):
+                    r.ids, r.dists, r.t_done = ids[i], dists[i], now
+                    self.done[r.rid] = r
+                    if obs.enabled:
+                        obs.metrics.observe(
+                            "request_latency_ms", r.latency_ms,
+                            kind=plan.kind, strategy=plan.strategy,
+                            tenant=plan.tenant,
+                        )
+            if obs.enabled:
+                bsp.set(queries=n, bucket=bucket)
+                obs.metrics.gauge("batch_occupancy", n / bucket)
+                obs.metrics.observe("batch_occupancy_hist", n / bucket,
+                                    kind=plan.kind)
+                obs.metrics.gauge("queue_depth", float(len(self.queue)))
+            if obs.nand_billing:
+                with obs.tracer.span("nand-billing"):
+                    from repro.plan.request import SearchResult
+                    pres = SearchResult(
+                        ids=ex.ids, dists=ex.dists,
+                        stats=self.searcher.planner.stats_for(plan, ex),
+                        plan=plan, raw=ex.raw,
+                    )
+                    record_plan_execution(
+                        obs.metrics, pres,
+                        index=self.mutable if self.mutable is not None
+                        else self._index_or_none(),
+                        batch_queries=n,
+                    )
         # running MEAN pad fraction over all batches (a sum would grow
         # without bound and read as >100% padding after a few batches)
         b = self._stats.batches
@@ -298,6 +378,13 @@ class ServingEngine:
         ) / (b + 1)
         self._stats.batches = b + 1
         self._stats.queries += n
+        if self._watch is not None:
+            self._plan_keys_seen.add(key)
+            self._watch.sample()
+            # the pow2-bucket contract as a LIVE assertion: at most
+            # log2(batch)+1 compiled shapes per distinct executed plan
+            buckets = int(math.log2(next_pow2(self.batch_size))) + 1
+            self._watch.check(buckets * len(self._plan_keys_seen))
         if (
             self.auto_consolidate
             and self.mutable is not None
@@ -305,6 +392,15 @@ class ServingEngine:
         ):
             self.consolidate()
         return batch
+
+    def _index_or_none(self):
+        """Served base index, or None for raw-corpus targets (those carry no
+        NAND geometry; billing then counts the batch as unbilled)."""
+        try:
+            idx = self.index
+        except AttributeError:
+            return None
+        return idx
 
     def consolidate(self) -> None:
         """Fold the delta segment into a rebuilt base index."""

@@ -31,6 +31,32 @@ from repro.core.search import (
 )
 from repro.shard.partition import TiledCorpus
 
+_obs = None     # Observability bundle (repro.obs) or None — module-wide hook
+
+
+def set_observability(obs) -> None:
+    """Install (or clear) the channel-observability sink — per-flush tile
+    load imbalance and skipped-lane counts (``Observability.
+    install_kernel_hooks`` wires this alongside the Pallas op hooks)."""
+    global _obs
+    _obs = obs if obs is not None and getattr(obs, "enabled", False) else None
+
+
+def _record_channel_stats(res: "ShardedSearchResult") -> None:
+    """Per-tile work distribution into the registry (straggler accounting —
+    the host-side twin of ``nand.simulate_sharded``'s load_imbalance).
+    Forces a device sync on the counters, so it only runs when the hook is
+    installed."""
+    hops = np.asarray(res.per_tile.n_hops)           # (P, Q)
+    per_tile = hops.sum(axis=1).astype(float)        # total work per channel
+    mean = per_tile.mean()
+    m = _obs.metrics
+    m.gauge("tile_load_imbalance",
+            float(per_tile.max() / mean) if mean > 0 else 1.0)
+    probed = np.asarray(res.probed)
+    m.counter("tile_lanes_skipped", float((~probed).sum()))
+    m.counter("tile_lanes_served", float(probed.sum()))
+
 
 class ShardedSearchResult(NamedTuple):
     ids: jnp.ndarray            # (Q, k) int32 GLOBAL ids, -1 padded
@@ -216,8 +242,11 @@ def sharded_search_kernel(
     cand_d = jnp.where(cand_ids >= 0, cand_d, jnp.inf)
     out_ids, out_d = cross_tile_merge(cand_ids, cand_d, cfg.k,
                                       use_pallas=cfg.use_pallas)
-    return ShardedSearchResult(ids=out_ids, dists=out_d, per_tile=per,
-                               probed=probed)
+    res = ShardedSearchResult(ids=out_ids, dists=out_d, per_tile=per,
+                              probed=probed)
+    if _obs is not None:
+        _record_channel_stats(res)
+    return res
 
 
 def sharded_search(

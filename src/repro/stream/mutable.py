@@ -66,6 +66,10 @@ class MutableIndex:
             "inserts": 0, "deletes": 0, "consolidations": 0,
             "logical_bytes": 0.0, "consolidation_bytes": 0.0,
         }
+        from repro.obs import NULL_OBS
+        # observability bundle — ``Searcher.open(..., obs=...)`` and the
+        # serving engine install a live one; default no-op
+        self.obs = NULL_OBS
 
     def _new_delta(self) -> DeltaSegment:
         return DeltaSegment(
@@ -195,6 +199,9 @@ class MutableIndex:
             assert row == ext, "attribute rows must track external ids"
         self.stats["inserts"] += 1
         self.stats["logical_bytes"] += self._delta.logical_bytes_per_insert()
+        if self.obs.enabled:
+            self.obs.metrics.counter("stream_inserts")
+            self.obs.metrics.gauge("delta_fraction", self.delta_fraction())
         return ext
 
     def delete(self, ext_id: int) -> bool:
@@ -208,6 +215,19 @@ class MutableIndex:
 
     def consolidate(self, reorder_samples: int = 64) -> ProximaIndex:
         """Merge delta + base into a rebuilt single-segment index."""
+        if self.obs.enabled:
+            import time as _time
+            t0 = _time.perf_counter()
+            with self.obs.tracer.span("consolidate", cat="stream",
+                                      live=self.live_count()):
+                out = self._consolidate(reorder_samples)
+            self.obs.metrics.observe(
+                "consolidate_ms", (_time.perf_counter() - t0) * 1e3)
+            self.obs.metrics.counter("stream_consolidations")
+            return out
+        return self._consolidate(reorder_samples)
+
+    def _consolidate(self, reorder_samples: int = 64) -> ProximaIndex:
         ext_ids, vecs = self.live_vectors()
         from repro.configs.base import upgrade_config
 

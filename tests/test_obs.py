@@ -1,0 +1,325 @@
+"""Observability layer: histogram quantile accuracy, label isolation,
+trace-event schema, disabled no-op fast path, recompile watch, and the
+engine-level snapshot/trace acceptance contract."""
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    Histogram, KernelWatch, MetricsRegistry, NULL_OBS, NULL_REGISTRY,
+    NULL_SPAN, Observability, RecompileWarning, Tracer,
+)
+
+
+# ---------------------------------------------------------------------------
+# Histogram quantiles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "exponential"])
+@pytest.mark.parametrize("q", [50.0, 95.0, 99.0])
+def test_histogram_quantiles_match_numpy(dist, q):
+    """Interpolated bucket quantiles track numpy.percentile within the
+    bucket-geometry error bound (16 log buckets/decade -> ~8% ratio between
+    adjacent edges; allow 12% relative + small absolute slack)."""
+    rng = np.random.default_rng(42)
+    if dist == "lognormal":
+        xs = rng.lognormal(mean=1.0, sigma=1.5, size=20_000)
+    elif dist == "uniform":
+        xs = rng.uniform(0.1, 500.0, size=20_000)
+    else:
+        xs = rng.exponential(scale=7.0, size=20_000)
+    h = Histogram()
+    for v in xs:
+        h.observe(v)
+    est, exact = h.quantile(q), float(np.percentile(xs, q))
+    assert abs(est - exact) <= 0.12 * exact + 1e-6, (dist, q, est, exact)
+
+
+def test_histogram_exact_tails_and_edge_cases():
+    h = Histogram()
+    assert math.isnan(h.quantile(50.0))
+    for v in (3.0, 5.0, 7.0):
+        h.observe(v)
+    assert h.quantile(0.0) == pytest.approx(3.0)    # clamped to observed min
+    assert h.quantile(100.0) == pytest.approx(7.0)  # clamped to observed max
+    assert h.count == 3 and h.mean == pytest.approx(5.0)
+    h.observe(float("nan"))                         # ignored, not propagated
+    assert h.count == 3
+    snap = h.snapshot()
+    assert set(snap) == {"count", "sum", "mean", "min", "max",
+                         "p50", "p95", "p99"}
+    assert snap["min"] == 3.0 and snap["max"] == 7.0
+
+
+def test_histogram_out_of_range_values():
+    """Values beyond the bucket span land in under/overflow slots and the
+    quantiles stay finite (clamped to observed extremes)."""
+    h = Histogram()
+    h.observe(1e-9)     # under the 1e-6 first edge
+    h.observe(1e13)     # over the 1e12 last edge
+    assert h.count == 2
+    assert h.quantile(50.0) >= 1e-9
+    assert h.quantile(99.0) <= 1e13
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+def test_label_isolation_across_tenants():
+    """Tenant A's cells never bleed into tenant B's — counters, gauges and
+    histograms are all keyed by the full label set."""
+    r = MetricsRegistry()
+    for _ in range(3):
+        r.counter("queries", tenant="a")
+    r.counter("queries", 10.0, tenant="b")
+    r.gauge("depth", 5.0, tenant="a")
+    r.gauge("depth", 9.0, tenant="b")
+    for v in (1.0, 2.0, 3.0):
+        r.observe("lat_ms", v, tenant="a")
+    r.observe("lat_ms", 1000.0, tenant="b")
+    assert r.counter_value("queries", tenant="a") == 3.0
+    assert r.counter_value("queries", tenant="b") == 10.0
+    assert r.counter_total("queries") == 13.0
+    assert r.gauge_value("depth", tenant="a") == 5.0
+    assert r.gauge_value("depth", tenant="b") == 9.0
+    assert r.histogram("lat_ms", tenant="a").count == 3
+    assert r.histogram("lat_ms", tenant="a").vmax == 3.0   # no bleed from b
+    assert r.histogram("lat_ms", tenant="b").count == 1
+    merged = r.merged_histogram("lat_ms")
+    assert merged.count == 4 and merged.vmax == 1000.0
+
+
+def test_label_order_and_none_normalization():
+    r = MetricsRegistry()
+    r.counter("c", kind="flat", strategy="none")
+    r.counter("c", strategy="none", kind="flat")     # same cell, any order
+    r.counter("c", kind="flat", strategy="none", tenant=None)  # None dropped
+    assert r.counter_value("c", strategy="none", kind="flat") == 3.0
+
+
+def test_snapshot_and_json_roundtrip(tmp_path):
+    r = MetricsRegistry()
+    r.counter("hits", 2.0, tenant="a")
+    r.gauge("occupancy", 0.75)
+    r.observe("lat_ms", 12.5, kind="flat")
+    snap = r.snapshot()
+    assert snap["counters"]["hits"] == {"tenant=a": 2.0}
+    assert snap["gauges"]["occupancy"] == {"": 0.75}
+    assert snap["histograms"]["lat_ms"]["kind=flat"]["count"] == 1
+    p = tmp_path / "metrics.json"
+    r.to_json(str(p))
+    assert json.loads(p.read_text())["counters"]["hits"]["tenant=a"] == 2.0
+
+
+def test_disabled_registry_is_noop():
+    """The disabled fast path records nothing and allocates no cells."""
+    r = MetricsRegistry(enabled=False)
+    r.counter("c", tenant="a")
+    r.gauge("g", 1.0)
+    r.observe("h", 2.0)
+    assert r.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert not r._counters and not r._gauges and not r._hists
+    assert NULL_REGISTRY.enabled is False
+    assert NULL_OBS.enabled is False
+    assert NULL_OBS.metrics is NULL_REGISTRY
+
+
+# ---------------------------------------------------------------------------
+# Tracing
+# ---------------------------------------------------------------------------
+
+def test_tracer_chrome_trace_schema(tmp_path):
+    tr = Tracer()
+    with tr.span("batch", kind="flat"):
+        with tr.span("kernel-execute"):
+            pass
+    tr.async_begin("queue-wait", 7)
+    tr.async_end("queue-wait", 7)
+    tr.instant("consolidate-trigger")
+    doc = tr.export(str(tmp_path / "trace.json"))
+    loaded = json.loads((tmp_path / "trace.json").read_text())
+    assert loaded == json.loads(json.dumps(doc))
+    evs = loaded["traceEvents"]
+    for e in evs:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0 and e["ts"] >= 0.0
+        if e["ph"] in ("b", "e"):
+            assert "id" in e
+    # sync nesting by time containment: kernel-execute inside batch
+    by = {e["name"]: e for e in evs if e["ph"] == "X"}
+    b, k = by["batch"], by["kernel-execute"]
+    assert b["ts"] <= k["ts"]
+    assert k["ts"] + k["dur"] <= b["ts"] + b["dur"] + 1e-6
+
+
+def test_disabled_tracer_returns_shared_null_span():
+    tr = Tracer(enabled=False)
+    assert tr.span("x") is NULL_SPAN
+    assert tr.span("y", a=1) is NULL_SPAN       # no per-call allocation
+    tr.async_begin("q", 1)
+    tr.async_end("q", 1)
+    tr.instant("i")
+    assert tr.events() == []
+    with tr.span("z") as sp:
+        sp.set(foo=1)                           # safe no-op sink
+
+
+def test_tracer_clear_keeps_metadata():
+    tr = Tracer()
+    with tr.span("s"):
+        pass
+    tr.clear()
+    assert all(e["ph"] == "M" for e in tr.events())
+    assert len(tr.events()) == 2                # process + thread names
+
+
+# ---------------------------------------------------------------------------
+# Observability bundle resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_accepts_none_bundle_and_obsconfig():
+    from repro.configs.base import ObsConfig
+
+    assert Observability.resolve(None) is NULL_OBS
+    live = Observability.on()
+    assert Observability.resolve(live) is live
+    assert Observability.resolve(ObsConfig()) is NULL_OBS   # all-off config
+    got = Observability.resolve(ObsConfig(metrics=True, tracing=False,
+                                          nand_billing=True))
+    assert got.metrics.enabled and not got.tracer.enabled
+    assert got.nand_billing
+    with pytest.raises(TypeError):
+        Observability.resolve(42)
+
+
+# ---------------------------------------------------------------------------
+# Recompile watch
+# ---------------------------------------------------------------------------
+
+def test_kernelwatch_warns_on_unexpected_growth():
+    r = MetricsRegistry()
+    size = {"n": 0}
+    w = KernelWatch(r, sources={"k": lambda: size["n"]})
+    size["n"] = 2
+    w.check(expected_growth=4)                   # within budget: silent
+    assert r.counter_total("unexpected_recompiles") == 0
+    assert r.gauge_value("jit_cache_growth", kernel="k") == 2
+    size["n"] = 9
+    with pytest.warns(RecompileWarning, match="compiled 9 new executables"):
+        w.check(expected_growth=4)
+    assert r.counter_value("unexpected_recompiles", kernel="k") == 5.0
+    with warnings.catch_warnings():              # warns once per kernel
+        warnings.simplefilter("error", RecompileWarning)
+        w.check(expected_growth=4)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level acceptance: snapshot contents + nested trace
+# ---------------------------------------------------------------------------
+
+def test_engine_obs_snapshot_and_trace(tiny_index, tmp_path):
+    from repro.serve.engine import ServingEngine
+
+    obs = Observability.on(tracing=True, nand_billing=True)
+    eng = ServingEngine(tiny_index, batch_size=8, flush_us=0.0, obs=obs)
+    for qq in tiny_index.dataset.queries[:12]:
+        eng.submit(qq)
+    eng.drain()
+
+    snap = obs.metrics.snapshot()
+    for name in ("queue_wait_ms", "request_latency_ms", "kernel_execute_ms",
+                 "nand_latency_us", "nand_pj_per_query"):
+        assert name in snap["histograms"], name
+        cell = next(iter(snap["histograms"][name].values()))
+        assert cell["count"] > 0
+        for p in ("p50", "p95", "p99"):
+            assert np.isfinite(cell[p])
+    assert "batch_occupancy" in snap["gauges"]
+    assert obs.metrics.counter_total("plan_cache_hits") > 0
+    assert obs.metrics.counter_total("plan_cache_misses") > 0
+    assert obs.metrics.counter_total("nand_billed_queries") == 12
+    # histograms are labeled by the serving plan
+    labels = next(iter(snap["histograms"]["request_latency_ms"]))
+    assert "kind=" in labels and "strategy=" in labels
+
+    doc = obs.tracer.export(str(tmp_path / "trace.json"))
+    evs = json.loads((tmp_path / "trace.json").read_text())["traceEvents"]
+    assert evs == json.loads(json.dumps(doc["traceEvents"]))
+    # every request's async queue-wait opens and closes
+    begins = [e["id"] for e in evs if e["ph"] == "b"
+              and e["name"] == "queue-wait"]
+    ends = [e["id"] for e in evs if e["ph"] == "e"
+            and e["name"] == "queue-wait"]
+    assert sorted(begins) == sorted(ends) and len(begins) == 12
+    # each flush nests batch > batch-assembly / kernel-execute / post-process
+    batches = [e for e in evs if e["ph"] == "X" and e["name"] == "batch"]
+    assert batches
+    for b in batches:
+        inner = [e for e in evs if e["ph"] == "X"
+                 and e["name"] in ("batch-assembly", "kernel-execute",
+                                   "post-process")
+                 and b["ts"] - 1e-6 <= e["ts"]
+                 and e["ts"] + e["dur"] <= b["ts"] + b["dur"] + 1e-6]
+        assert {e["name"] for e in inner} >= {"batch-assembly",
+                                              "kernel-execute",
+                                              "post-process"}
+
+
+def test_engine_obs_default_off_records_nothing(tiny_index):
+    from repro.serve.engine import ServingEngine
+
+    eng = ServingEngine(tiny_index, batch_size=4, flush_us=0.0)
+    assert eng.obs is NULL_OBS
+    for qq in tiny_index.dataset.queries[:4]:
+        eng.submit(qq)
+    eng.drain()
+    assert NULL_OBS.metrics.snapshot() == {"counters": {}, "gauges": {},
+                                           "histograms": {}}
+    assert NULL_OBS.tracer.events() == []
+
+
+def test_nand_billing_unbillable_execution_counts_not_raises(tiny_index):
+    """An execution without NAND geometry (no index handle) records an
+    unbilled-batch counter instead of failing the serving path."""
+    from repro.obs import record_plan_execution
+    from repro.plan import Searcher, SearchRequest
+
+    s = Searcher.open(tiny_index.corpus(), cfg=tiny_index.config.search,
+                      metric=tiny_index.dataset.metric)
+    res = s.search(SearchRequest(queries=tiny_index.dataset.queries[:4]))
+    r = MetricsRegistry()
+    sim = record_plan_execution(r, res, index=None)    # geometry unknown
+    assert sim is None
+    assert r.counter_total("nand_unbilled_batches") == 1
+    assert r.counter_total("nand_billed_queries") == 0
+    # with geometry the same execution bills cleanly
+    sim = record_plan_execution(r, res, index=tiny_index)
+    assert sim is not None
+    assert r.counter_total("nand_billed_queries") == 4
+    assert r.merged_histogram("nand_pj_per_query").count == 1
+    # disabled registry: the bridge returns before importing the simulator
+    assert record_plan_execution(NULL_REGISTRY, res, index=tiny_index) is None
+
+
+def test_stream_consolidate_metrics(tiny_index):
+    from repro.stream.mutable import MutableIndex
+
+    obs = Observability.on(tracing=True, nand_billing=False)
+    mi = MutableIndex(tiny_index)
+    mi.obs = obs
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        mi.insert(rng.standard_normal(tiny_index.dataset.dim)
+                  .astype(np.float32))
+    mi.consolidate()
+    assert obs.metrics.counter_total("stream_inserts") == 4
+    assert obs.metrics.counter_total("stream_consolidations") == 1
+    assert obs.metrics.histogram("consolidate_ms").count == 1
+    assert obs.metrics.gauge_value("delta_fraction") is not None
+    names = {e["name"] for e in obs.tracer.events()}
+    assert "consolidate" in names

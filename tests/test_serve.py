@@ -132,20 +132,34 @@ def test_engine_step_noop_without_requests(tiny_index):
 def test_engine_bucketed_batches_reuse_compiles(tiny_index):
     """Varying queue depths hit a fixed set of power-of-two bucket shapes:
     flushing many different sub-batch sizes may only add one compiled
-    executable per bucket, never one per batch size."""
+    executable per bucket, never one per batch size.  The invariant is now
+    asserted through the observability layer: the engine's ``KernelWatch``
+    tracks jit-cache growth per kernel and raises ``RecompileWarning`` when
+    a batch defeats the bucket scheme."""
+    import warnings
+
+    from repro.obs import Observability, RecompileWarning
+
     if not hasattr(search, "_cache_size"):
         pytest.skip("jax.jit cache introspection unavailable")
-    eng = ServingEngine(tiny_index, batch_size=8, flush_us=0.0)
-    before = search._cache_size()
+    obs = Observability.on(tracing=False, nand_billing=False)
     q = tiny_index.dataset.queries
     got = {}
-    for n in (1, 2, 3, 5, 6, 7, 3, 1, 5):   # buckets: 1, 2, 4, 8 only
-        rids = [eng.submit(qq) for qq in q[:n]]
-        eng.drain()
-        for i, r in enumerate(rids):
-            got[r] = eng.done[r].ids
-    new_compiles = search._cache_size() - before
-    assert new_compiles <= 4, f"{new_compiles} compiles for 9 batch sizes"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RecompileWarning)
+        eng = ServingEngine(tiny_index, batch_size=8, flush_us=0.0, obs=obs)
+        for n in (1, 2, 3, 5, 6, 7, 3, 1, 5):   # buckets: 1, 2, 4, 8 only
+            rids = [eng.submit(qq) for qq in q[:n]]
+            eng.drain()
+            for i, r in enumerate(rids):
+                got[r] = eng.done[r].ids
+    growth = obs.metrics.gauge_value("jit_cache_growth",
+                                     kernel="graph_search")
+    assert growth is not None, "KernelWatch never sampled"
+    # warm-up compiled the full-batch bucket before the watch baseline;
+    # serving may add at most the remaining pow2 buckets (1, 2, 4)
+    assert growth <= 4, f"{growth} compiles for 9 batch sizes"
+    assert obs.metrics.counter_total("unexpected_recompiles") == 0
     # padding lanes never leak into results
     direct = np.asarray(
         search(tiny_index.corpus(), q[:7], tiny_index.config.search,
