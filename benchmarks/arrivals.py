@@ -1,0 +1,88 @@
+"""Shared open-loop arrival processes for the serving benchmarks.
+
+``continuous_bench`` and ``serving_bench --poisson/--burst`` drive the
+engines with REAL-TIME arrival schedules from here, so the two benchmarks
+load the engines identically and their latency percentiles compare.
+
+All generators are seeded and return absolute arrival offsets in SECONDS
+from the run's start, sorted ascending.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson_arrivals(n: int, rate_qps: float, seed: int = 0) -> np.ndarray:
+    """``n`` arrivals of a homogeneous Poisson process at ``rate_qps``
+    (exponential inter-arrival gaps)."""
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be positive, got {rate_qps}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+
+
+def bursty_arrivals(n: int, rate_qps: float, burst_size: int = 8,
+                    spread: float = 0.1, seed: int = 0) -> np.ndarray:
+    """Bursts of ``burst_size`` near-simultaneous arrivals with Poisson
+    burst starts, mean rate still ``rate_qps``: each burst's members land
+    within ``spread`` of the mean burst period after its start.  The
+    open-loop equivalent of the paper's queue-filling traffic — it stresses
+    admission (iteration-level schedulers absorb a burst into free slots;
+    batch flushers serialize it into consecutive flush windows)."""
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be positive, got {rate_qps}")
+    if burst_size < 1:
+        raise ValueError(f"burst_size must be >= 1, got {burst_size}")
+    rng = np.random.default_rng(seed)
+    period = burst_size / rate_qps
+    n_bursts = -(-n // burst_size)
+    starts = np.cumsum(rng.exponential(period, size=n_bursts))
+    t = np.repeat(starts, burst_size)[:n]
+    t = t + rng.uniform(0.0, spread * period, size=n)
+    return np.sort(t)
+
+
+def arrival_schedule(kind: str, n: int, rate_qps: float, seed: int = 0,
+                     **kwargs) -> np.ndarray:
+    """Dispatch by name: ``poisson`` | ``burst``."""
+    if kind == "poisson":
+        return poisson_arrivals(n, rate_qps, seed=seed)
+    if kind == "burst":
+        return bursty_arrivals(n, rate_qps, seed=seed, **kwargs)
+    raise ValueError(f"unknown arrival process {kind!r} "
+                     "(expected 'poisson' or 'burst')")
+
+
+def replay(engine, queries: np.ndarray, arrivals: np.ndarray,
+           filters=None) -> list:
+    """Drive ``engine`` open-loop in real time: submit query ``i % len``
+    when the wall clock passes ``arrivals[i]``, stepping the engine between
+    arrivals; drain at the end.  Returns the request ids in arrival order.
+
+    Latencies come from the engine's own ``perf_counter`` timestamps
+    (``Request.latency_ms``), so queueing delay under load is measured, not
+    modeled.
+    """
+    import time
+
+    n = len(arrivals)
+    nq = len(queries)
+    rids: list = []
+    i = 0
+    t0 = time.perf_counter()
+    while i < n:
+        now = time.perf_counter() - t0
+        if arrivals[i] <= now:
+            f = filters[i % len(filters)] if filters is not None else None
+            rids.append(engine.submit(queries[i % nq], filter=f))
+            i += 1
+            continue
+        engine.step()
+        idle = not engine.queue and (
+            not engine.continuous or engine.inflight() == 0)
+        if idle:
+            wait = arrivals[i] - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(min(wait, 1e-3))
+    engine.drain()
+    return rids

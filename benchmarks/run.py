@@ -32,6 +32,7 @@ MODULES = [
     "filtered_bench",
     "planner_bench",
     "serving_bench",
+    "continuous_bench",
     "kernels_bench",
     "roofline_bench",
 ]

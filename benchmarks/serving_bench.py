@@ -14,7 +14,13 @@ headline serving numbers as ``BENCH_serving.json``:
 CI's bench-smoke job keeps the JSON as an artifact, so serving regressions
 show up as a trajectory, not an anecdote.
 
+``--poisson RATE`` replays the query passes as an open-loop Poisson arrival
+schedule at RATE qps instead of back-to-back submission (``--burst`` makes
+the schedule bursty) — the same ``benchmarks.arrivals`` generator the
+continuous-batching benchmark uses, so the two latency snapshots compare.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--json PATH]
+        [--poisson RATE] [--burst]
 """
 from __future__ import annotations
 
@@ -39,7 +45,8 @@ def _recall_at_k(done, rids, gt, k: int) -> float:
     return hits / (len(rids) * k)
 
 
-def main(out=print, smoke: bool = False, json_path: str | None = None) -> None:
+def main(out=print, smoke: bool = False, json_path: str | None = None,
+         poisson: float | None = None, burst: bool = False) -> None:
     idx = get_index("sift-like")
     obs = Observability.on(tracing=True, nand_billing=True)
     eng = ServingEngine(idx, batch_size=16, flush_us=0.0, obs=obs)
@@ -49,11 +56,21 @@ def main(out=print, smoke: bool = False, json_path: str | None = None) -> None:
 
     passes = 1 if smoke else 4
     rids_first: list[int] = []
-    for p in range(passes):
-        rids = [eng.submit(qq) for qq in q]
-        eng.drain()
-        if p == 0:
-            rids_first = rids
+    if poisson is not None or burst:
+        # open-loop replay: arrival i carries query i % len(q), so the
+        # first len(q) request ids line up with the ground-truth rows
+        from benchmarks.arrivals import arrival_schedule, replay
+
+        rate = poisson if poisson is not None else 100.0
+        arrivals = arrival_schedule("burst" if burst else "poisson",
+                                    passes * len(q), rate, seed=7)
+        rids_first = replay(eng, q, arrivals)[: len(q)]
+    else:
+        for p in range(passes):
+            rids = [eng.submit(qq) for qq in q]
+            eng.drain()
+            if p == 0:
+                rids_first = rids
     recall = _recall_at_k(eng.done, rids_first, gt, k)
 
     m = obs.metrics
@@ -68,6 +85,9 @@ def main(out=print, smoke: bool = False, json_path: str | None = None) -> None:
 
     payload = {
         "dataset": "sift-like",
+        "arrival_process": ("burst" if burst else
+                            "poisson" if poisson is not None else "closed"),
+        "arrival_rate_qps": poisson,
         "queries_served": int(eng.stats["queries"]),
         "batches": int(eng.stats["batches"]),
         "recall_at_k": recall,
@@ -111,6 +131,13 @@ if __name__ == "__main__":
                     help="single pass over the query set (CI smoke)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help=f"snapshot output path (default {DEFAULT_JSON})")
+    ap.add_argument("--poisson", type=float, default=None, metavar="RATE",
+                    help="open-loop Poisson arrivals at RATE qps instead "
+                         "of back-to-back passes")
+    ap.add_argument("--burst", action="store_true",
+                    help="bursty arrival schedule (rate from --poisson, "
+                         "default 100 qps)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(smoke=args.smoke, json_path=args.json)
+    main(smoke=args.smoke, json_path=args.json, poisson=args.poisson,
+         burst=args.burst)

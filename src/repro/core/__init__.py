@@ -3,7 +3,9 @@ data-layout optimizations) as composable JAX modules."""
 from repro.core.dataset import Dataset, exact_knn, make_dataset, recall_at_k
 from repro.core.index import ProximaIndex, build_index
 from repro.core.search import (
-    Corpus, SearchResult, graph_search, search, search_reference,
+    Corpus, SearchResult, SearchState, finalize_search, graph_search,
+    graph_search_step, graph_search_stepped, init_search_state, search,
+    search_reference, search_state_active,
 )
 
 __all__ = [
@@ -16,6 +18,12 @@ __all__ = [
     "build_index",
     "Corpus",
     "SearchResult",
+    "SearchState",
+    "init_search_state",
+    "graph_search_step",
+    "graph_search_stepped",
+    "finalize_search",
+    "search_state_active",
     "search",
     "search_reference",
 ]

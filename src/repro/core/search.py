@@ -175,6 +175,168 @@ def _merge_sort_topl_bitonic(ids, dists, acc, evaluated, n_ids, n_dists):
     return all_ids[perm], all_d[perm], all_acc[perm], all_ev[perm]
 
 
+def _passes_of(ids, node_mask):
+    """Valid AND mask-passing, elementwise (-1 slots never pass). With
+    ``node_mask=None`` this is plain validity — the unfiltered path."""
+    valid = ids >= 0
+    if node_mask is None:
+        return valid
+    return valid & node_mask[jnp.maximum(ids, 0)]
+
+
+def _build_adts(corpus: Corpus, queries: jnp.ndarray, cfg: SearchConfig,
+                metric: str) -> jnp.ndarray:
+    """Batched ADT construction (Pallas pq_adt kernel path) — shared by the
+    while_loop kernel and ``init_search_state``."""
+    if not cfg.use_pq:
+        return jnp.zeros((queries.shape[0], 1, 1), jnp.float32)
+    if cfg.use_pallas:
+        from repro.kernels import ops
+
+        return ops.pq_adt(queries, corpus.centroids, metric)
+    return jax.vmap(lambda q: compute_adt(q, corpus.centroids, metric))(
+        queries
+    )
+
+
+def _round_fns(corpus: Corpus, cfg: SearchConfig, metric: str,
+               bloom_bits: int, num_hashes: int, node_mask):
+    """THE traversal round, factored out of the ``lax.while_loop``: returns
+    ``(init_one, cond, body)`` per-query functions.  ``graph_search`` wraps
+    them back into a while_loop and ``graph_search_step`` applies exactly one
+    guarded round — both paths trace the SAME functions, which is what makes
+    the round-step path bit-identical to the while_loop kernel (enforced by
+    the round-step equivalence suite in tests/test_plan.py).
+
+    ``cond`` is also the vmap batching rule for while_loop: jax lowers a
+    vmapped while_loop to "loop while any(cond), select(cond, body(s), s)
+    per lane" — so one ``graph_search_step`` application IS one iteration of
+    the vmapped loop, and iterating it until no lane is active reproduces
+    the loop's fixpoint exactly (extra steps on a finished batch are
+    no-ops)."""
+    L, k = cfg.list_size, cfg.k
+    R = corpus.adjacency.shape[1]
+    # beam wider than the candidate list can never pop more than L entries
+    E = min(max(int(getattr(cfg, "beam_width", 1)), 1), L)
+    use_pq, do_et = cfg.use_pq, cfg.early_termination
+    t_init = cfg.t_init if do_et else L
+    t_step = cfg.t_step if do_et else L
+    merge = _merge_sort_topl_bitonic if cfg.use_pallas else _merge_sort_topl
+
+    def tdist(q, adt, ids):
+        if use_pq:
+            if cfg.use_pallas:
+                from repro.kernels import ops
+
+                return ops.pq_lookup(corpus.codes[ids], adt)
+            return pq_distance(corpus.codes[ids], adt)
+        return _exact_dist(q, corpus.base[ids], metric)
+
+    def init_one(q, adt):
+        ep = corpus.entry_point
+        d0 = tdist(q, adt, ep[None])[0]
+        ids0 = jnp.full((L,), -1, jnp.int32).at[0].set(ep)
+        dists0 = jnp.full((L,), INF).at[0].set(d0)
+        acc0 = jnp.full((L,), INF)
+        if not use_pq:
+            acc0 = acc0.at[0].set(d0)
+        bits0 = bloom.bloom_init(bloom_bits)
+        bits0 = bloom.insert(bits0, ep[None], jnp.ones((1,), bool), num_hashes)
+
+        return _State(
+            ids=ids0, dists=dists0, acc=acc0,
+            evaluated=jnp.zeros((L,), bool), bits=bits0,
+            t=jnp.int32(min(t_init, L)),
+            prev_topk=jnp.full((k,), -2, jnp.int32),
+            stable=jnp.int32(0), done=jnp.bool_(False),
+            n_hops=jnp.int32(0), n_pq=jnp.int32(1 if use_pq else 0),
+            n_acc=jnp.int32(0 if use_pq else 1),
+            n_hot=jnp.int32(0), n_free=jnp.int32(0), rounds=jnp.int32(0),
+        )
+
+    def cond(s: _State):
+        return (~s.done) & (s.rounds < cfg.max_rounds)
+
+    def body(q, adt, s: _State):
+        valid = s.ids >= 0
+        unev = valid & ~s.evaluated
+        n_unev = unev.sum()
+        has_unev = unev.any()
+        # positions of unevaluated entries in list (distance) order: a
+        # stable sort of ~unev floats them to the front, so sel[:E] are
+        # the E best unevaluated candidates — the round's beam. E == 1
+        # keeps the original O(L) argmax instead of the O(L log L) sort.
+        if E == 1:
+            sel = jnp.argmax(unev)[None]               # (1,)
+        else:
+            sel = jnp.argsort(~unev, stable=True)[:E]  # (E,) distinct
+        sel_valid = jnp.arange(E) < n_unev             # (E,)
+        vs = jnp.where(sel_valid, s.ids[sel], 0)       # (E,) beam ids
+
+        # ---- expand the beam: one E-row adjacency gather ---------------
+        neigh = corpus.adjacency[vs].reshape(E * R)    # (E*R,)
+        fresh = _dedup_round(neigh) & ~bloom.contains(s.bits, neigh, num_hashes)
+        fresh = fresh & jnp.repeat(sel_valid, R)
+        nd = tdist(q, adt, neigh)                      # one batched call
+        nd = jnp.where(fresh, nd, INF)
+        bits = bloom.insert(s.bits, neigh, fresh, num_hashes)
+        evaluated = s.evaluated.at[sel].set(s.evaluated[sel] | sel_valid)
+        n_new = fresh.sum()
+        is_hot = (vs < corpus.hot_count) & sel_valid   # (E,)
+        ids, dists, acc, evaluated = merge(
+            s.ids, s.dists, s.acc, evaluated,
+            jnp.where(fresh, neigh, -1).astype(jnp.int32), nd,
+        )
+
+        # ---- top-T evaluated? -> rerank + early-termination ------------
+        valid = ids >= 0
+        pl = _passes_of(ids, node_mask)
+        in_t = (jnp.arange(L) < s.t) & valid
+        all_eval = jnp.where(in_t.any(), (~in_t | evaluated).all(), False)
+
+        # only passing candidates are admitted to the reranked top-k
+        # (non-passing ones still route; in_t implies valid, so with no
+        # mask in_t & pl == in_t and this is the unfiltered arithmetic)
+        need = in_t & pl & jnp.isinf(acc)
+        acc_new = _exact_dist(q, corpus.base[jnp.maximum(ids, 0)], metric)
+        acc2 = jnp.where(need & all_eval, acc_new, acc)
+        n_acc_new = jnp.where(all_eval, need.sum(), 0)
+        if use_pq:
+            rerank_key = jnp.where(in_t & pl, acc2, INF)
+        else:
+            acc2 = jnp.where(valid, dists, INF)
+            rerank_key = jnp.where(in_t & pl, acc2, INF)
+        new_topk = _topk_ids_by(ids, rerank_key, k)
+        same = (new_topk == s.prev_topk).all()
+        stable = jnp.where(all_eval, jnp.where(same, s.stable + 1, 1), s.stable)
+        prev_topk = jnp.where(all_eval, new_topk, s.prev_topk)
+        t = jnp.where(all_eval, s.t + t_step, s.t)
+
+        terminated = do_et & all_eval & (stable >= cfg.repetition_rate)
+        exhausted = ~has_unev
+        overflow = t > L
+        done = terminated | exhausted | overflow
+
+        hot_new = (fresh.reshape(E, R) & is_hot[:, None]).sum()
+        new = _State(
+            ids=ids, dists=dists, acc=acc2, evaluated=evaluated, bits=bits,
+            t=jnp.minimum(t, L), prev_topk=prev_topk, stable=stable,
+            done=done,
+            n_hops=s.n_hops + jnp.minimum(n_unev, E).astype(jnp.int32),
+            n_pq=s.n_pq + (n_new if use_pq else 0),
+            n_acc=s.n_acc + n_acc_new + (0 if use_pq else n_new),
+            n_hot=s.n_hot + is_hot.sum().astype(jnp.int32),
+            n_free=s.n_free + hot_new,
+            rounds=s.rounds + 1,
+        )
+        # lanes that were already done keep their state (vmap-safety)
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(s.done, a, b), s, new
+        )
+
+    return init_one, cond, body
+
+
 @partial(
     jax.jit,
     static_argnames=("cfg", "metric", "bloom_bits", "num_hashes"),
@@ -194,159 +356,35 @@ def graph_search(
 
     This is the innermost compiled engine every ``repro.plan.QueryPlan``
     composes (flat, masked, per-tile fan-out, merged base segment); call it
-    through ``repro.plan.Searcher`` unless you are writing a kernel."""
+    through ``repro.plan.Searcher`` unless you are writing a kernel.  The
+    round-stepped decomposition of the same traversal —
+    ``init_search_state`` / ``graph_search_step`` / ``finalize_search`` —
+    serves the continuous-batching engine and is bit-identical to this
+    while_loop at every round count."""
     if metric == "angular":
         queries = l2_normalize(queries)
-
-    L, k = cfg.list_size, cfg.k
-    R = corpus.adjacency.shape[1]
-    # beam wider than the candidate list can never pop more than L entries
-    E = min(max(int(getattr(cfg, "beam_width", 1)), 1), L)
-    use_pq, do_et = cfg.use_pq, cfg.early_termination
-    t_init = cfg.t_init if do_et else L
-    t_step = cfg.t_step if do_et else L
-
-    # --- batched ADT construction (Pallas pq_adt kernel path) ---------------
-    if use_pq:
-        if cfg.use_pallas:
-            from repro.kernels import ops
-
-            adts = ops.pq_adt(queries, corpus.centroids, metric)
-        else:
-            adts = jax.vmap(lambda q: compute_adt(q, corpus.centroids, metric))(
-                queries
-            )
-    else:
-        adts = jnp.zeros((queries.shape[0], 1, 1), jnp.float32)
-
-    merge = _merge_sort_topl_bitonic if cfg.use_pallas else _merge_sort_topl
-
-    def passes_of(ids):
-        """Valid AND mask-passing, elementwise (-1 slots never pass). With
-        ``node_mask=None`` this is plain validity — the unfiltered path."""
-        valid = ids >= 0
-        if node_mask is None:
-            return valid
-        return valid & node_mask[jnp.maximum(ids, 0)]
+    adts = _build_adts(corpus, queries, cfg, metric)
+    init_one, cond, body = _round_fns(corpus, cfg, metric, bloom_bits,
+                                      num_hashes, node_mask)
 
     def one_query(q, adt):
-        def tdist(ids):
-            if use_pq:
-                if cfg.use_pallas:
-                    from repro.kernels import ops
-
-                    return ops.pq_lookup(corpus.codes[ids], adt)
-                return pq_distance(corpus.codes[ids], adt)
-            return _exact_dist(q, corpus.base[ids], metric)
-
-        ep = corpus.entry_point
-        d0 = tdist(ep[None])[0]
-        ids0 = jnp.full((L,), -1, jnp.int32).at[0].set(ep)
-        dists0 = jnp.full((L,), INF).at[0].set(d0)
-        acc0 = jnp.full((L,), INF)
-        if not use_pq:
-            acc0 = acc0.at[0].set(d0)
-        bits0 = bloom.bloom_init(bloom_bits)
-        bits0 = bloom.insert(bits0, ep[None], jnp.ones((1,), bool), num_hashes)
-
-        st = _State(
-            ids=ids0, dists=dists0, acc=acc0,
-            evaluated=jnp.zeros((L,), bool), bits=bits0,
-            t=jnp.int32(min(t_init, L)),
-            prev_topk=jnp.full((k,), -2, jnp.int32),
-            stable=jnp.int32(0), done=jnp.bool_(False),
-            n_hops=jnp.int32(0), n_pq=jnp.int32(1 if use_pq else 0),
-            n_acc=jnp.int32(0 if use_pq else 1),
-            n_hot=jnp.int32(0), n_free=jnp.int32(0), rounds=jnp.int32(0),
+        return jax.lax.while_loop(
+            cond, lambda s: body(q, adt, s), init_one(q, adt)
         )
 
-        def cond(s: _State):
-            return (~s.done) & (s.rounds < cfg.max_rounds)
-
-        def body(s: _State):
-            valid = s.ids >= 0
-            unev = valid & ~s.evaluated
-            n_unev = unev.sum()
-            has_unev = unev.any()
-            # positions of unevaluated entries in list (distance) order: a
-            # stable sort of ~unev floats them to the front, so sel[:E] are
-            # the E best unevaluated candidates — the round's beam. E == 1
-            # keeps the original O(L) argmax instead of the O(L log L) sort.
-            if E == 1:
-                sel = jnp.argmax(unev)[None]               # (1,)
-            else:
-                sel = jnp.argsort(~unev, stable=True)[:E]  # (E,) distinct
-            sel_valid = jnp.arange(E) < n_unev             # (E,)
-            vs = jnp.where(sel_valid, s.ids[sel], 0)       # (E,) beam ids
-
-            # ---- expand the beam: one E-row adjacency gather ---------------
-            neigh = corpus.adjacency[vs].reshape(E * R)    # (E*R,)
-            fresh = _dedup_round(neigh) & ~bloom.contains(s.bits, neigh, num_hashes)
-            fresh = fresh & jnp.repeat(sel_valid, R)
-            nd = tdist(neigh)                              # one batched call
-            nd = jnp.where(fresh, nd, INF)
-            bits = bloom.insert(s.bits, neigh, fresh, num_hashes)
-            evaluated = s.evaluated.at[sel].set(s.evaluated[sel] | sel_valid)
-            n_new = fresh.sum()
-            is_hot = (vs < corpus.hot_count) & sel_valid   # (E,)
-            ids, dists, acc, evaluated = merge(
-                s.ids, s.dists, s.acc, evaluated,
-                jnp.where(fresh, neigh, -1).astype(jnp.int32), nd,
-            )
-
-            # ---- top-T evaluated? -> rerank + early-termination ------------
-            valid = ids >= 0
-            pl = passes_of(ids)
-            in_t = (jnp.arange(L) < s.t) & valid
-            all_eval = jnp.where(in_t.any(), (~in_t | evaluated).all(), False)
-
-            # only passing candidates are admitted to the reranked top-k
-            # (non-passing ones still route; in_t implies valid, so with no
-            # mask in_t & pl == in_t and this is the unfiltered arithmetic)
-            need = in_t & pl & jnp.isinf(acc)
-            acc_new = _exact_dist(q, corpus.base[jnp.maximum(ids, 0)], metric)
-            acc2 = jnp.where(need & all_eval, acc_new, acc)
-            n_acc_new = jnp.where(all_eval, need.sum(), 0)
-            if use_pq:
-                rerank_key = jnp.where(in_t & pl, acc2, INF)
-            else:
-                acc2 = jnp.where(valid, dists, INF)
-                rerank_key = jnp.where(in_t & pl, acc2, INF)
-            new_topk = _topk_ids_by(ids, rerank_key, k)
-            same = (new_topk == s.prev_topk).all()
-            stable = jnp.where(all_eval, jnp.where(same, s.stable + 1, 1), s.stable)
-            prev_topk = jnp.where(all_eval, new_topk, s.prev_topk)
-            t = jnp.where(all_eval, s.t + t_step, s.t)
-
-            terminated = do_et & all_eval & (stable >= cfg.repetition_rate)
-            exhausted = ~has_unev
-            overflow = t > L
-            done = terminated | exhausted | overflow
-
-            hot_new = (fresh.reshape(E, R) & is_hot[:, None]).sum()
-            new = _State(
-                ids=ids, dists=dists, acc=acc2, evaluated=evaluated, bits=bits,
-                t=jnp.minimum(t, L), prev_topk=prev_topk, stable=stable,
-                done=done,
-                n_hops=s.n_hops + jnp.minimum(n_unev, E).astype(jnp.int32),
-                n_pq=s.n_pq + (n_new if use_pq else 0),
-                n_acc=s.n_acc + n_acc_new + (0 if use_pq else n_new),
-                n_hot=s.n_hot + is_hot.sum().astype(jnp.int32),
-                n_free=s.n_free + hot_new,
-                rounds=s.rounds + 1,
-            )
-            # lanes that were already done keep their state (vmap-safety)
-            return jax.tree_util.tree_map(
-                lambda a, b: jnp.where(s.done, a, b), s, new
-            )
-
-        return jax.lax.while_loop(cond, body, st)
-
     s = jax.vmap(one_query)(queries, adts)
+    return _finalize_batch(corpus, cfg, metric, node_mask, queries, s)
 
+
+def _finalize_batch(corpus: Corpus, cfg: SearchConfig, metric: str,
+                    node_mask, queries: jnp.ndarray, s: _State) -> SearchResult:
+    """Post-loop beta-margin rerank + top-k extraction over a BATCHED lane
+    state (Alg.1 l.19-22) — shared verbatim by the while_loop kernel and the
+    round-step path's ``finalize_search``."""
+    L, k = cfg.list_size, cfg.k
     # ---- final beta rerank, batched (Alg.1 l.19-21; Pallas l2_rerank) ------
     valid = s.ids >= 0                                       # (Q, L)
-    pass_l = passes_of(s.ids)                                # (Q, L)
+    pass_l = _passes_of(s.ids, node_mask)                    # (Q, L)
     if node_mask is None:
         t_idx = jnp.clip(s.t, 1, L) - 1
         d_t = jnp.take_along_axis(s.dists, t_idx[:, None], 1)[:, 0]
@@ -367,7 +405,7 @@ def graph_search(
         # silently drop all results
         thr = jnp.where(jnp.isinf(d_t), INF,
                         d_t + (cfg.beta - 1.0) * jnp.abs(d_t))
-    if use_pq and cfg.rerank:
+    if cfg.use_pq and cfg.rerank:
         need = pass_l & (s.dists <= thr[:, None]) & jnp.isinf(s.acc)
         cand = corpus.base[jnp.maximum(s.ids, 0)]            # (Q, L, D)
         if cfg.use_pallas:
@@ -395,6 +433,140 @@ def graph_search(
         ids=out_ids, dists=-neg, n_hops=s.n_hops, n_pq=s.n_pq, n_acc=n_acc,
         n_hot_hops=s.n_hot, n_free_pq=s.n_free, rounds=s.rounds,
     )
+
+
+# ---------------------------------------------------------------------------
+# Round-stepped traversal — the continuous-batching kernel surface
+# ---------------------------------------------------------------------------
+# ``graph_search`` runs every lane to its fixpoint inside one while_loop; the
+# three kernels below expose the SAME traversal one round at a time so an
+# iteration-level scheduler (repro.serve.ServingEngine(continuous=True)) can
+# retire finished lanes and refill their slots between rounds:
+#
+#     state = init_search_state(corpus, queries, cfg, ...)
+#     while search_state_active(state, cfg).any():
+#         state = graph_search_step(corpus, state, cfg, ...)   # ONE round
+#     res = finalize_search(corpus, state, cfg, ...)           # beta rerank
+#
+# All three are jit-compiled with fixed shapes (Q lanes x list_size) and built
+# from the same ``_round_fns``/``_finalize_batch`` pieces as ``graph_search``,
+# so iterating the step to quiescence is bit-identical to the while_loop (a
+# vmapped while_loop lowers to exactly this select-guarded step).
+
+
+class SearchState(NamedTuple):
+    """Mid-traversal snapshot of a batch of lanes.  ``queries`` are already
+    metric-normalized and ``adts`` are the per-lane PQ lookup tables — both
+    loop-invariant, carried here so ``graph_search_step`` is a pure
+    State -> State function.  A lane is live while
+    ``search_state_active(state, cfg)`` holds; rows may be swapped between
+    two states with ``jnp.where`` (slot refill) because every leaf's leading
+    axis is the lane axis."""
+
+    queries: jnp.ndarray  # (Q, D) normalized query vectors
+    adts: jnp.ndarray     # (Q, M, K) ADT lookup tables ((Q,1,1) when !use_pq)
+    lanes: _State         # batched per-lane traversal state
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "metric", "bloom_bits", "num_hashes"),
+)
+def init_search_state(
+    corpus: Corpus,
+    queries: jnp.ndarray,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    bloom_bits: int = 1 << 17,
+    num_hashes: int = 8,
+    node_mask: jnp.ndarray | None = None,
+) -> SearchState:
+    """Round 0 of the traversal for a (Q, D) query batch: normalize, build
+    ADTs, seed every lane at the entry point.  ``node_mask`` only matters in
+    later rounds but is accepted here for signature symmetry."""
+    if metric == "angular":
+        queries = l2_normalize(queries)
+    adts = _build_adts(corpus, queries, cfg, metric)
+    init_one, _, _ = _round_fns(corpus, cfg, metric, bloom_bits, num_hashes,
+                                node_mask)
+    lanes = jax.vmap(init_one)(queries, adts)
+    return SearchState(queries=queries, adts=adts, lanes=lanes)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "metric", "bloom_bits", "num_hashes"),
+)
+def graph_search_step(
+    corpus: Corpus,
+    state: SearchState,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    bloom_bits: int = 1 << 17,
+    num_hashes: int = 8,
+    node_mask: jnp.ndarray | None = None,
+) -> SearchState:
+    """ONE traversal round over every lane (vmapped, fixed shapes).  Inactive
+    lanes — done, or at ``max_rounds`` — pass through unchanged, exactly like
+    the select-guarded iteration a vmapped while_loop lowers to, so stepping
+    an all-quiet batch is a no-op and stepping until quiet reproduces
+    ``graph_search`` bit-for-bit."""
+    _, cond, body = _round_fns(corpus, cfg, metric, bloom_bits, num_hashes,
+                               node_mask)
+
+    def step_one(q, adt, s):
+        active = cond(s)
+        new = body(q, adt, s)
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(active, b, a), s, new
+        )
+
+    lanes = jax.vmap(step_one)(state.queries, state.adts, state.lanes)
+    return state._replace(lanes=lanes)
+
+
+def search_state_active(state: SearchState, cfg: SearchConfig) -> jnp.ndarray:
+    """(Q,) bool — lanes that still have rounds to run.  This is the
+    while_loop's cond applied batchwise; host code should ``.any()`` it to
+    decide whether another ``graph_search_step`` is needed."""
+    return (~state.lanes.done) & (state.lanes.rounds < cfg.max_rounds)
+
+
+@partial(jax.jit, static_argnames=("cfg", "metric"))
+def finalize_search(
+    corpus: Corpus,
+    state: SearchState,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    node_mask: jnp.ndarray | None = None,
+) -> SearchResult:
+    """Post-traversal beta-margin rerank + top-k (Alg.1 l.19-22) over lanes
+    that have quiesced — the same ``_finalize_batch`` the while_loop kernel
+    runs.  Queries inside ``state`` are already normalized; do NOT pass them
+    through ``init_search_state`` twice."""
+    return _finalize_batch(corpus, cfg, metric, node_mask,
+                           state.queries, state.lanes)
+
+
+def graph_search_stepped(
+    corpus: Corpus,
+    queries: jnp.ndarray,
+    cfg: SearchConfig,
+    metric: str = "l2",
+    bloom_bits: int = 1 << 17,
+    num_hashes: int = 8,
+    node_mask: jnp.ndarray | None = None,
+) -> SearchResult:
+    """Host-side driver: iterate ``graph_search_step`` to quiescence, then
+    finalize.  Semantically (bit-for-bit) equivalent to ``graph_search`` —
+    the equivalence suite in tests/test_plan.py pins this; useful as a
+    reference for schedulers and for testing the step kernels."""
+    state = init_search_state(corpus, queries, cfg, metric, bloom_bits,
+                              num_hashes, node_mask)
+    while bool(search_state_active(state, cfg).any()):
+        state = graph_search_step(corpus, state, cfg, metric, bloom_bits,
+                                  num_hashes, node_mask)
+    return finalize_search(corpus, state, cfg, metric, node_mask)
 
 
 def search(
@@ -442,8 +614,14 @@ def jit_cache_sizes() -> dict:
     recompile detector's input (``repro.obs.KernelWatch``).  Empty when the
     jax build exposes no ``_cache_size`` introspection."""
     out = {}
-    if hasattr(graph_search, "_cache_size"):
-        out["graph_search"] = int(graph_search._cache_size())
+    for name, fn in (
+        ("graph_search", graph_search),
+        ("init_search_state", init_search_state),
+        ("graph_search_step", graph_search_step),
+        ("finalize_search", finalize_search),
+    ):
+        if hasattr(fn, "_cache_size"):
+            out[name] = int(fn._cache_size())
     return out
 
 

@@ -53,6 +53,12 @@ class NandConfig:
     pe_cycle_limit: int = 100_000         # SLC endurance (P/E cycles)
     # -- capacity
     bits_per_cell: int = 1            # SLC (ECC-free, §V-E)
+    # -- channel pipelining (NDSEARCH-style round overlap)
+    double_buffer: bool = False       # page buffer is double-buffered: page
+                                      # reads for round t+1 overlap the PQ
+                                      # scoring of round t, so a round's
+                                      # critical path is max(read, score)
+                                      # instead of read + score
 
     @property
     def n_cores(self) -> int:

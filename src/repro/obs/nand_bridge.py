@@ -19,12 +19,15 @@ from typing import Optional
 
 
 def record_plan_execution(metrics, pres, *, index=None, nand=None, eng=None,
-                          batch_queries: Optional[int] = None):
+                          batch_queries: Optional[int] = None,
+                          n_queues: Optional[int] = None):
     """Bill one plan-layer ``SearchResult`` into ``metrics``.
 
     ``index`` resolves trace geometry (the served ``ProximaIndex`` /
-    ``MutableIndex``); ``nand``/``eng`` override the simulator configs.
-    Returns the ``SimResult`` (or None when the execution is unbillable).
+    ``MutableIndex``); ``nand``/``eng`` override the simulator configs and
+    ``n_queues`` the modeled scheduler queue count (Fig. 16 sweeps it
+    through the serving path).  Returns the ``SimResult`` (or None when the
+    execution is unbillable).
     """
     if not getattr(metrics, "enabled", False):
         return None
@@ -42,6 +45,8 @@ def record_plan_execution(metrics, pres, *, index=None, nand=None, eng=None,
         kwargs["nand"] = nand
     if eng is not None:
         kwargs["eng"] = eng
+    if n_queues is not None:
+        kwargs["n_queues"] = n_queues
     sim = simulate(trace, **kwargs)
     for name, value in sim.metrics().items():
         metrics.observe(name, value, **labels)

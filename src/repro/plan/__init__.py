@@ -15,6 +15,7 @@ from repro.plan.planner import (
     QueryPlanner,
 )
 from repro.plan.request import SearchRequest, SearchResult, SearchStats
+from repro.plan.rounds import RoundSession
 from repro.plan.searcher import (
     Searcher,
     validate_attribute_store,
@@ -27,6 +28,7 @@ __all__ = [
     "PlanConfig",
     "QueryPlan",
     "QueryPlanner",
+    "RoundSession",
     "SearchRequest",
     "SearchResult",
     "SearchStats",

@@ -346,6 +346,74 @@ class QueryPlanner:
         self._artifacts[plan.cache_key] = {"mask": mask}
         return plan
 
+    # -------------------------------------------------------- round stepping
+    def round_session(self, plan: QueryPlan):
+        """The round-steppable form of ``plan`` (a ``repro.plan.rounds.
+        RoundSession``), or ``None`` when the plan has no per-round spine —
+        tiled / distributed fan-outs, bitmap scans, empty short-circuits,
+        one-shot mask-token plans — in which case callers fall back to
+        whole-batch ``execute``.  Merged plans re-decide the live filter
+        regime here (exactly like the merged kernel does at execute time)
+        and are steppable only when it resolves to masked traversal on a
+        single-tile base."""
+        from repro.plan.rounds import RoundSession
+
+        pc = self.plan_cfg
+        if plan.kind == "flat" and not plan.mask_token:
+            if plan.strategy == "none":
+                return RoundSession(
+                    planner=self, plan=plan, corpus=self.corpus, cfg=plan.cfg,
+                    metric=self.metric, bloom_bits=pc.bloom_bits,
+                    num_hashes=pc.num_hashes,
+                )
+            if plan.strategy == "masked":
+                art = self._artifacts.get(plan.cache_key) or {}
+                mask = art.get("mask")
+                if mask is None:
+                    return None
+                return RoundSession(
+                    planner=self, plan=plan, corpus=self.corpus, cfg=plan.cfg,
+                    metric=self.metric, bloom_bits=pc.bloom_bits,
+                    num_hashes=pc.num_hashes, node_mask=mask,
+                    selectivity=plan.selectivity,
+                )
+            return None
+        if plan.kind == "merged":
+            mut = self.mutable
+            if mut is None or getattr(mut, "num_tiles", 1) > 1:
+                return None
+            k = plan.cfg.k
+            k_base = min(plan.cfg.list_size,
+                         k + mut.stream_cfg.base_overfetch)
+            base_cfg = dataclasses.replace(plan.cfg, k=k_base) \
+                if k_base != k else plan.cfg
+            # the merged kernel calls graph_search with ITS defaults (the
+            # flat_filtered_search planner likewise uses a default
+            # PlanConfig), so merged sessions must too — bit-identity
+            common = dict(planner=self, plan=plan, metric=mut.metric,
+                          bloom_bits=1 << 17, num_hashes=8, mutable=mut)
+            if plan.strategy == "none":
+                return RoundSession(corpus=mut.corpus(), cfg=base_cfg,
+                                    **common)
+            # adaptive: combined filter ∧ ¬tombstone admission masks against
+            # the LIVE tombstone set, regime re-decided like the kernel does
+            fcfg = getattr(mut.base.config, "filter", None) or FilterConfig()
+            base_mask, ext_mask = mut.filter_masks(plan.spec)
+            base_mask = np.asarray(base_mask, bool)
+            n_pass = int(base_mask.sum())
+            sel = n_pass / max(base_mask.size, 1)
+            if n_pass == 0 or sel <= fcfg.brute_force_selectivity \
+                    or n_pass <= base_cfg.k:
+                return None          # scan / empty regimes: not steppable
+            from repro.filter.traversal import adapt_search_cfg
+
+            eff = adapt_search_cfg(base_cfg, sel, fcfg)
+            return RoundSession(corpus=mut.corpus(), cfg=eff,
+                                node_mask=base_mask, ext_mask=ext_mask,
+                                selectivity=sel, base_mode="traversal",
+                                **common)
+        return None
+
     def _artifacts_for(self, plan: QueryPlan) -> dict:
         """Compiled artifacts for a plan.  Spec-keyed plans keep theirs
         cached (the engine re-executes them every flush); mask-token plans

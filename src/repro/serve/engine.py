@@ -39,6 +39,30 @@ predictable branch per call site, no allocation, no timing.
 All engine timing uses ``time.perf_counter()`` — the monotonic clock;
 ``time.time()`` is wall-clock and jumps under NTP step corrections, which
 produced negative latencies and spurious/missed flush timeouts.
+
+Continuous batching (``ServingEngine(continuous=True)``): instead of
+flushing whole batches through one ``lax.while_loop``, the engine keeps a
+fixed pool of ``slots`` in-flight lanes per plan cache key and advances ALL
+of them one traversal round per ``step()`` call (a "tick", via the plan
+layer's ``RoundSession`` over the ``core.search`` round-step kernels).
+Lanes whose traversal quiesces are retired immediately — beta rerank,
+delta/tombstone fusion for merged plans, NAND billing, future completion —
+and their slots refill from the queue on the next tick, so no query ever
+waits on another's last round.  Requests are admitted the moment a slot is
+free (no flush window); plans without a round-steppable spine (tiled /
+distributed fan-outs, bitmap scans) fall back to the batch-flush path
+transparently.  Slot pools hold ONE fixed lane shape per plan, so the
+round-step kernels compile once per (plan, slots) — the same pow2-bucket
+recompile budget applies.
+
+Streaming caveats in continuous mode: a lane traverses the base corpus (and,
+when filtered, the admission mask) pinned at its session's creation, while
+tombstones and the delta segment are read LIVE at retire time — deleted
+vectors never surface, inserts are visible to every lane retired after them.
+Consolidation rebuilds the base id space, so the engine completes all
+in-flight merged lanes BEFORE consolidating (including the capacity-forced
+consolidation inside ``insert``) and then re-creates their sessions against
+the fresh base.
 """
 from __future__ import annotations
 
@@ -92,12 +116,86 @@ class EngineStats:
     consolidations: int = 0
     filtered_queries: int = 0
     filter_scan_batches: int = 0
+    ticks: int = 0                   # continuous mode: round-step ticks run
+    retired: int = 0                 # continuous mode: lanes retired
+    fallback_batches: int = 0        # continuous mode: non-steppable plans
+                                     # served through the batch-flush path
     # plan_cache_hits / plan_cache_misses intentionally live on the PLANNER
     # (the component that owns the cache); ``ServingEngine.stats`` merges
     # them into the dict view at read time instead of hand-syncing fields
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _SlotPool:
+    """One plan's fixed pool of in-flight lanes (continuous mode).  ``state``
+    is a ``core.search.SearchState`` over exactly ``len(requests)`` lanes —
+    the ONE compiled shape this pool's round-step kernels ever see; free
+    slots hold quiesced dummy lanes (``done=True``) so stepping them is a
+    no-op."""
+    session: object                          # plan.RoundSession
+    requests: List[Optional[Request]]        # slot -> in-flight request
+    state: object = None                     # lazily built on first admit
+
+    @property
+    def occupied(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+
+_select_jit = None
+
+
+def _select_lanes(mask: np.ndarray, new, old):
+    """Per-lane select over two same-shape ``SearchState``s: lane i comes
+    from ``new`` where ``mask[i]`` — the fixed-shape slot-refill primitive
+    (no concatenation, no shape change, no recompile).  Jitted as one call
+    for the same reason as ``_gather_rows``: per-leaf eager ``where``s cost
+    a dispatch per state field."""
+    global _select_jit
+    import jax
+    import jax.numpy as jnp
+
+    if _select_jit is None:
+        def _f(m, a, b):
+            return jax.tree_util.tree_map(
+                lambda x, y: jnp.where(
+                    m.reshape(m.shape + (1,) * (x.ndim - 1)), x, y),
+                a, b,
+            )
+        _select_jit = jax.jit(_f)
+    return _select_jit(np.asarray(mask), new, old)
+
+
+_gather_jit = None
+
+
+def _gather_rows(state, rows: np.ndarray):
+    """Row-gather a ``SearchState`` down to the given lanes (device-side).
+    Retiring finalizes only the quiesced rows — padded to a power-of-two
+    bucket so the rerank kernel compiles at log2(slots)+1 shapes per plan
+    instead of reranking the whole pool on every retiring tick.  Jitted as
+    ONE call: an eager per-leaf gather costs a device dispatch per state
+    field, which dominated the tick."""
+    global _gather_jit
+    import jax
+
+    if _gather_jit is None:
+        _gather_jit = jax.jit(
+            lambda s, i: jax.tree_util.tree_map(lambda a: a[i], s))
+    return _gather_jit(state, rows)
+
+
+def _quiet_free_lanes(state, occupied: np.ndarray):
+    """Force ``done=True`` on unoccupied lanes so they never burn rounds —
+    a free slot's dummy query must not traverse."""
+    import jax.numpy as jnp
+
+    m = jnp.asarray(occupied)
+    lanes = state.lanes._replace(
+        done=jnp.where(m, state.lanes.done, True))
+    return state._replace(lanes=lanes)
 
 
 class ServingEngine:
@@ -115,6 +213,10 @@ class ServingEngine:
         attributes=None,
         plan: Optional[PlanConfig] = None,
         obs=None,
+        continuous: bool = False,
+        slots: Optional[int] = None,
+        nand=None,
+        nand_queues: Optional[int] = None,
     ):
         pcfg = plan or PlanConfig()
         legacy = dict(search=cfg, num_tiles=num_tiles,
@@ -128,17 +230,36 @@ class ServingEngine:
         self.batch_size = batch_size
         self.flush_us = flush_us
         self.auto_consolidate = auto_consolidate
+        self.continuous = bool(continuous)
+        self.slots = int(slots) if slots else batch_size
+        self.nand = nand                     # NandConfig override for billing
+                                             # (e.g. double_buffer=True)
+        self.nand_queues = nand_queues       # modeled scheduler queue count
+                                             # (Fig. 16 N_q sweep knob)
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self._next = 0
         self._stats = EngineStats()
         self._plan_keys_seen: set = set()    # recompile-budget denominator
+        self._pools: Dict[tuple, _SlotPool] = {}
+        self._sessions: Dict[tuple, object] = {}   # key -> RoundSession|None
+        self._plan_memo: Dict[int, tuple] = {}     # id(plan) -> (plan,
+                                                   #   session, cache_key)
         if self.obs.enabled:
             self.obs.install_kernel_hooks()
         # warm the compile for the full-batch bucket (smaller power-of-two
         # buckets compile lazily on first use)
         dummy = np.zeros((batch_size, self.index.dataset.dim), np.float32)
         self.searcher.search(SearchRequest(queries=dummy))
+        if self.continuous:
+            # warm the round-step kernels at the slot-pool shape for the
+            # default (unfiltered) plan, so serving-time ticks start hot
+            plan0 = self.searcher.plan(SearchRequest(queries=dummy[:1]))
+            sess0 = self._session_for(plan0)
+            if sess0 is not None:
+                z = np.zeros((self.slots, dummy.shape[1]), np.float32)
+                st = sess0.step(sess0.init(z))
+                sess0.finalize(st)
         # recompile watchdog baselined AFTER warm-up, so only serving-time
         # jit-cache growth is judged against the pow2-bucket x plan budget
         self._watch = KernelWatch(self.obs.metrics) \
@@ -244,11 +365,17 @@ class ServingEngine:
         if self.mutable is None:
             raise RuntimeError("engine serves a frozen index — wrap it in "
                                "stream.MutableIndex for online updates")
+        if self.continuous and self.mutable.delta_full:
+            # this insert WILL consolidate (delta at capacity): complete
+            # in-flight merged lanes first — they traverse the base corpus
+            # whose id space the consolidation is about to rebuild
+            self._complete_merged_pools()
         before = self.mutable.stats["consolidations"]
         ext = self.mutable.insert(vector, attrs=attrs)  # may consolidate
-        self._stats.consolidations += (
-            self.mutable.stats["consolidations"] - before
-        )
+        consolidated = self.mutable.stats["consolidations"] - before
+        if consolidated and self.continuous:
+            self._reset_merged_sessions()
+        self._stats.consolidations += consolidated
         self._stats.inserts += 1
         return ext
 
@@ -281,8 +408,20 @@ class ServingEngine:
         )
 
     def step(self, force: bool = False) -> List[Request]:
-        """Run one batch if due; returns completed requests. In streaming
-        mode, consolidation triggers between batches.
+        """Advance the engine; returns completed requests.
+
+        Batch mode: run one plan-homogeneous batch if due (full bucket or
+        flush timeout).  Continuous mode: one scheduler tick — admit queued
+        requests into free slots, advance every in-flight lane ONE traversal
+        round, retire lanes that quiesced; plans without a steppable spine
+        flush through the batch path when due.  In streaming mode,
+        consolidation triggers between batches/ticks."""
+        if self.continuous:
+            return self._tick(force)
+        return self._step_batch(force)
+
+    def _step_batch(self, force: bool = False) -> List[Request]:
+        """Run one batch if due; returns completed requests.
 
         Batches are homogeneous in PLAN: the flush takes the head request's
         plan cache key and gathers (in FIFO order) only requests sharing it
@@ -297,13 +436,19 @@ class ServingEngine:
         if plan is None:             # deferred planning error (e.g. filter
             plan = self.searcher.plan(  # without a store) raises HERE
                 SearchRequest(queries=head.query, filter=head.filter))
+            # planning succeeded after all — cache the plan back onto the
+            # head and every queued same-filter request, so they batch under
+            # the real cache key and are never re-planned on later flushes
+            head.plan = plan
+            for r in self.queue:
+                if r.plan is None and r.filter == head.filter:
+                    r.plan = plan
 
         def _key(r: Request):
             return r.plan.cache_key if r.plan is not None \
                 else ("unplanned", r.filter)
 
-        key = plan.cache_key if head.plan is not None \
-            else ("unplanned", head.filter)
+        key = plan.cache_key
         obs = self.obs
         with obs.tracer.span("batch", kind=plan.kind,
                              strategy=plan.strategy) as bsp:
@@ -368,7 +513,8 @@ class ServingEngine:
                         obs.metrics, pres,
                         index=self.mutable if self.mutable is not None
                         else self._index_or_none(),
-                        batch_queries=n,
+                        nand=self.nand, batch_queries=n,
+                        n_queues=self.nand_queues,
                     )
         # running MEAN pad fraction over all batches (a sum would grow
         # without bound and read as >100% padding after a few batches)
@@ -393,6 +539,230 @@ class ServingEngine:
             self.consolidate()
         return batch
 
+    # ----------------------------------------------- continuous (tick) mode
+    def _plan_entry(self, plan: Optional[QueryPlan]):
+        """(session, cache_key) for a plan — None session when the plan has
+        no round-steppable spine.  Memoized by plan object IDENTITY: the
+        planner's plan cache hands out one ``QueryPlan`` per cache key, so
+        the admission scan resolves a queued request with one dict lookup
+        instead of re-hashing its config/spec tuple every tick.  The memo
+        entry holds the plan itself, keeping the id stable."""
+        if plan is None:
+            return None, None
+        entry = self._plan_memo.get(id(plan))
+        if entry is None:
+            key = plan.cache_key
+            if key not in self._sessions:
+                self._sessions[key] = \
+                    self.searcher.planner.round_session(plan)
+            entry = (plan, self._sessions[key], key)
+            self._plan_memo[id(plan)] = entry
+        return entry[1], entry[2]
+
+    def _session_for(self, plan: Optional[QueryPlan]):
+        """Cached ``RoundSession`` for a plan (None when the plan has no
+        round-steppable spine — also cached, so the planner is asked once
+        per cache key)."""
+        return self._plan_entry(plan)[0]
+
+    def inflight(self) -> int:
+        """Lanes currently mid-traversal across every slot pool."""
+        return sum(p.occupied for p in self._pools.values())
+
+    def _admit(self, pool: _SlotPool, admissions: List[tuple]) -> None:
+        """Fill freed slots: init a full-pool state for the refill queries
+        and per-lane-select it into the live state (fixed shapes — one
+        compiled init/step per pool, regardless of how many slots refill)."""
+        dim = self.index.dataset.dim if self._index_or_none() is not None \
+            else len(admissions[0][1].query)
+        S = len(pool.requests)
+        qmat = np.zeros((S, dim), np.float32)
+        refill = np.zeros((S,), bool)
+        for slot, r in admissions:
+            qmat[slot] = r.query
+            refill[slot] = True
+            pool.requests[slot] = r
+        fresh = pool.session.init(qmat)
+        state = fresh if pool.state is None \
+            else _select_lanes(refill, fresh, pool.state)
+        occupied = np.array([r is not None for r in pool.requests])
+        pool.state = _quiet_free_lanes(state, occupied)
+
+    def _refill(self) -> None:
+        """Admit queued requests into free slots, FIFO, creating slot pools
+        per plan cache key on first use.  Requests whose plan is unplanned
+        (deferred planning error) or not round-steppable stay queued for the
+        batch-flush fallback."""
+        if not self.queue:
+            return
+        obs = self.obs
+        admitted: Dict[tuple, List[tuple]] = {}
+        remaining: Deque[Request] = deque()
+        now = time.perf_counter()
+        # per-pool free-slot budget: a full pool rejects its requests with
+        # one dict lookup (no O(slots) slot scan per queued request), so a
+        # deep backlog costs the tick a cheap identity-memo pass, not
+        # repeated plan-key hashing
+        free = {k: len(p.requests) - p.occupied
+                for k, p in self._pools.items()}
+        while self.queue:
+            r = self.queue.popleft()
+            sess, key = self._plan_entry(r.plan)
+            if sess is None:
+                remaining.append(r)
+                continue
+            pool = self._pools.get(key)
+            if pool is None:
+                pool = _SlotPool(session=sess,
+                                 requests=[None] * self.slots)
+                self._pools[key] = pool
+                free[key] = self.slots
+            if free[key] <= 0:
+                remaining.append(r)          # pool full — wait for retires
+                continue
+            taken = {s for s, _ in admitted.get(key, ())}
+            slot = next((i for i, req in enumerate(pool.requests)
+                         if req is None and i not in taken), None)
+            if slot is None:
+                remaining.append(r)
+                continue
+            free[key] -= 1
+            admitted.setdefault(key, []).append((slot, r))
+            if obs.enabled:
+                obs.tracer.async_end("queue-wait", r.rid)
+                obs.metrics.observe(
+                    "queue_wait_ms", (now - r.t_submit) * 1e3,
+                    kind=r.plan.kind, strategy=r.plan.strategy,
+                    tenant=r.plan.tenant,
+                )
+        self.queue = remaining
+        for key, admissions in admitted.items():
+            self._admit(self._pools[key], admissions)
+            self._plan_keys_seen.add(key)
+
+    def _step_pool(self, pool: _SlotPool) -> List[Request]:
+        """ONE round over a pool's lanes; finalize + hand back every lane
+        that quiesced.  Retired batches bill through the NAND model exactly
+        like flushed ones (``RoundSession.complete`` returns the same
+        plan-layer result shape)."""
+        obs = self.obs
+        plan = pool.session.plan
+        pool.state = pool.session.step(pool.state)
+        active = pool.session.active(pool.state)
+        rows = [i for i, r in enumerate(pool.requests)
+                if r is not None and not active[i]]
+        if not rows:
+            return []
+        idx = np.asarray(rows)
+        bucket = next_pow2(len(rows))      # pad rows to a pow2 gather shape
+        pad = np.full((bucket,), rows[0], np.int64)
+        pad[: len(rows)] = rows
+        core = pool.session.finalize(_gather_rows(pool.state, pad))
+        core_rows = type(core)(*(np.asarray(f)[: len(rows)] for f in core))
+        qrows = np.stack([pool.requests[i].query for i in rows])
+        rounds = pool.session.rounds(pool.state)[idx]
+        with obs.tracer.span("retire", kind=plan.kind,
+                             strategy=plan.strategy, lanes=len(rows)):
+            pres = pool.session.complete(qrows, core_rows)
+        now = time.perf_counter()
+        completed: List[Request] = []
+        for j, i in enumerate(rows):
+            r = pool.requests[i]
+            r.ids, r.dists, r.t_done = pres.ids[j], pres.dists[j], now
+            self.done[r.rid] = r
+            pool.requests[i] = None
+            completed.append(r)
+            if obs.enabled:
+                obs.metrics.observe(
+                    "request_latency_ms", r.latency_ms, kind=plan.kind,
+                    strategy=plan.strategy, tenant=plan.tenant,
+                )
+                obs.metrics.observe("rounds_in_flight", float(rounds[j]),
+                                    kind=plan.kind, strategy=plan.strategy)
+        if plan.spec is not None:
+            self._stats.filtered_queries += len(rows)
+        self._stats.retired += len(rows)
+        self._stats.queries += len(rows)
+        if obs.nand_billing:
+            with obs.tracer.span("nand-billing"):
+                record_plan_execution(
+                    obs.metrics, pres,
+                    index=self.mutable if self.mutable is not None
+                    else self._index_or_none(),
+                    nand=self.nand, batch_queries=len(rows),
+                    n_queues=self.nand_queues,
+                )
+        return completed
+
+    def _tick(self, force: bool = False) -> List[Request]:
+        """One scheduler tick: refill free slots from the queue, advance
+        every occupied pool one traversal round, retire quiesced lanes.
+        Requests the round-step path cannot serve flush through the batch
+        path when due (or on ``force``)."""
+        obs = self.obs
+        completed: List[Request] = []
+        with obs.tracer.span("tick"):
+            self._refill()
+            for key, pool in self._pools.items():
+                if pool.occupied == 0:
+                    continue
+                completed.extend(self._step_pool(pool))
+                if obs.enabled:
+                    obs.metrics.gauge("slot_occupancy",
+                                      pool.occupied / len(pool.requests),
+                                      kind=pool.session.plan.kind,
+                                      strategy=pool.session.plan.strategy)
+        self._stats.ticks += 1
+        if obs.enabled:
+            obs.metrics.gauge("queue_depth", float(len(self.queue)))
+        # non-steppable head (tiled/distributed/scan plans, deferred
+        # planning errors): serve it through the batch-flush path
+        if self.queue and self._session_for(self.queue[0].plan) is None \
+                and (force or self._flush_due()):
+            n0 = self._stats.batches
+            completed.extend(self._step_batch(force=force))
+            self._stats.fallback_batches += self._stats.batches - n0
+        elif self._watch is not None:
+            self._watch.sample()
+            # continuous pools gather-finalize at pow2 buckets up to the
+            # slot count, so the budget widens to max(batch, slots)
+            width = max(self.batch_size, self.slots)
+            buckets = int(math.log2(next_pow2(width))) + 1
+            self._watch.check(buckets * max(len(self._plan_keys_seen), 1))
+        if (
+            self.auto_consolidate
+            and self.mutable is not None
+            and self.mutable.needs_consolidation()
+        ):
+            self.consolidate()
+        return completed
+
+    def _complete_merged_pools(self) -> List[Request]:
+        """Run every in-flight MERGED lane to completion (they traverse the
+        pre-consolidation base corpus, whose id space is about to be
+        rebuilt).  Retired requests land in ``done`` as usual."""
+        out: List[Request] = []
+        for key, pool in self._pools.items():
+            if pool.session.plan.kind != "merged":
+                continue
+            guard = self.cfg.max_rounds + 2
+            while pool.occupied and guard:
+                out.extend(self._step_pool(pool))
+                guard -= 1
+        return out
+
+    def _reset_merged_sessions(self) -> None:
+        """Drop merged sessions + pools — they pin the pre-consolidation
+        corpus/masks.  Fresh ones are created on the next admit."""
+        for key in [k for k, p in self._pools.items()
+                    if p.session.plan.kind == "merged"]:
+            del self._pools[key]
+        for key in [k for k, s in self._sessions.items()
+                    if s is not None and s.plan.kind == "merged"]:
+            del self._sessions[key]
+        self._plan_memo = {i: e for i, e in self._plan_memo.items()
+                           if e[2] in self._sessions}
+
     def _index_or_none(self):
         """Served base index, or None for raw-corpus targets (those carry no
         NAND geometry; billing then counts the batch as unbilled)."""
@@ -403,14 +773,36 @@ class ServingEngine:
         return idx
 
     def consolidate(self) -> None:
-        """Fold the delta segment into a rebuilt base index."""
+        """Fold the delta segment into a rebuilt base index.  In continuous
+        mode, in-flight merged lanes complete first — their states reference
+        the old base id space."""
         if self.mutable is None:
             return
+        self._complete_merged_pools()
         self.mutable.consolidate()
+        self._reset_merged_sessions()
         self._stats.consolidations += 1
 
-    def drain(self) -> List[Request]:
-        out = []
-        while self.queue:
+    def drain(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Force-run until the queue (and, in continuous mode, every
+        in-flight lane) is empty.  Bounded: a plan that cannot make progress
+        raises instead of spinning forever.  The default budget is generous
+        — batch mode completes >= 1 request per forced step; a continuous
+        lane finishes within ``max_rounds`` ticks."""
+        out: List[Request] = []
+        if max_steps is None:
+            pending = len(self.queue) + self.inflight()
+            per = (self.cfg.max_rounds + 2) if self.continuous else 2
+            max_steps = per * (pending + 1) + 16
+        steps = 0
+        while self.queue or (self.continuous and self.inflight()):
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"drain() exceeded {max_steps} steps with "
+                    f"{len(self.queue)} queued and {self.inflight()} "
+                    "in-flight — a plan that cannot execute (or a stuck "
+                    "lane) is spinning the loop"
+                )
             out.extend(self.step(force=True))
+            steps += 1
         return out

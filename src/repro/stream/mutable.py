@@ -121,6 +121,14 @@ class MutableIndex:
             or self.delta_fraction() >= self.stream_cfg.consolidate_fraction
         )
 
+    @property
+    def delta_full(self) -> bool:
+        """True when the next ``insert`` MUST consolidate first (the delta
+        segment is at capacity).  The continuous serving engine checks this
+        to complete in-flight merged lanes before the base index is rebuilt
+        under them."""
+        return self._delta.full
+
     def live_count(self) -> int:
         return (
             self.base.dataset.num_base + len(self.delta_ext)

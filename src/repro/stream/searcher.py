@@ -102,9 +102,32 @@ def merged_search_kernel(
         base_mode, res = fres.mode, fres.result
     else:
         res = graph_search(mutable.corpus(), q, base_cfg, mutable.metric)
-    base_ids = np.asarray(res.ids)                    # (Q, k_base) internal
-    base_d = np.asarray(res.dists)
+    out_ids, out_d, n_delta = _merge_base_delta(
+        mutable, q, np.asarray(res.ids), np.asarray(res.dists), ext_mask, k
+    )
+    return MergedResult(
+        ids=out_ids, dists=out_d, base=res, delta_candidates=n_delta,
+        selectivity=1.0 if base_mask is None else float(base_mask.mean()),
+        base_mode=base_mode,
+    )
 
+
+def _merge_base_delta(
+    mutable,
+    q: np.ndarray,
+    base_ids: np.ndarray,
+    base_d: np.ndarray,
+    ext_mask,
+    k: int,
+):
+    """Cross-segment fusion half of the merged kernel: map base-internal ids
+    to external ids, drop tombstoned / non-passing hits, search the delta
+    segment once for the batch, and top-k merge the two candidate streams by
+    accurate distance.  Factored out of ``merged_search_kernel`` so the
+    continuous-batching retire path (which produces ``base_ids``/``base_d``
+    through the round-step kernels, lane by lane) can fuse retired rows
+    against the live delta/tombstone state without re-running the base
+    search.  Returns ``(ids, dists, delta_candidates)``."""
     valid = (base_ids >= 0) & np.isfinite(base_d)
     ext = mutable.ext_base[np.clip(base_ids, 0, None)]  # (Q, k_base)
     dead = mutable.tombstone_mask(ext)
@@ -153,11 +176,7 @@ def merged_search_kernel(
     out_d = np.take_along_axis(cand_d, order, 1).astype(np.float32)
     out_ids = np.take_along_axis(cand_ids, order, 1).astype(np.int32)
     out_ids = np.where(np.isfinite(out_d), out_ids, np.int32(-1))
-    return MergedResult(
-        ids=out_ids, dists=out_d, base=res, delta_candidates=n_delta,
-        selectivity=1.0 if base_mask is None else float(base_mask.mean()),
-        base_mode=base_mode,
-    )
+    return out_ids, out_d, n_delta
 
 
 def search_merged(

@@ -455,3 +455,111 @@ def test_typed_request_filter_field(tiny_index):
 
     hints = typing.get_type_hints(Request)
     assert hints["filter"] == typing.Optional[FilterSpec]
+
+
+# ---------------------------------------------------------------------------
+# Round-step equivalence: the continuous-batching spine.  Iterating the
+# exported step kernels to quiescence must be BIT-identical to the
+# lax.while_loop executor across {beam 1,4} x {unfiltered, masked} x
+# {flat, merged} — the contract that lets the iteration-level scheduler
+# serve the same results as a batch flush.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("beam", [1, 4])
+@pytest.mark.parametrize("filtered", [False, True])
+@pytest.mark.parametrize("mutable", [False, True])
+def test_round_session_matches_batch_execute(tiny_index, tiny_store, beam,
+                                             filtered, mutable):
+    """RoundSession init/step*/finalize/complete == Searcher.search for the
+    same plan, field for field."""
+    idx = tiny_index
+    q = idx.dataset.queries[:8]
+    cfg = dataclasses.replace(idx.config.search, beam_width=beam)
+    spec = SPEC_MODERATE if filtered else None
+
+    if mutable:
+        from repro.stream import MutableIndex
+
+        mut_store = random_attributes(idx.dataset.num_base,
+                                      {"category": 8, "price": 1000}, seed=7)
+        mut = MutableIndex(idx, attributes=mut_store)
+        v = np.asarray(q[0]) + 1e-4
+        mut.insert(v, attrs={"category": 1, "price": 250})
+        mut.delete(3)
+        s = Searcher.open(mut, cfg=cfg)
+    else:
+        s = Searcher.open(idx, cfg=cfg,
+                          attributes=tiny_store if filtered else None)
+
+    batch = s.search(SearchRequest(queries=q, filter=spec))
+    plan = s.plan(SearchRequest(queries=q[:1], filter=spec))
+    sess = s.planner.round_session(plan)
+    assert sess is not None, f"plan {plan.kind}/{plan.strategy} not steppable"
+
+    state = sess.init(q)
+    guard = cfg.max_rounds + 2
+    while sess.active(state).any():
+        state = sess.step(state)
+        guard -= 1
+        assert guard > 0, "round stepping failed to quiesce"
+    res = sess.complete(q, sess.finalize(state))
+
+    np.testing.assert_array_equal(np.asarray(res.ids),
+                                  np.asarray(batch.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  np.asarray(batch.dists))
+
+
+@pytest.mark.parametrize("beam", [1, 4])
+@pytest.mark.parametrize("masked", [False, True])
+def test_core_stepped_matches_while_loop(tiny_index, tiny_store, beam,
+                                         masked):
+    """core.search.graph_search_stepped (init/step/finalize kernels driven
+    from the host) is bit-identical to graph_search's lax.while_loop on
+    every SearchResult field."""
+    from repro.core.search import graph_search, graph_search_stepped
+
+    idx = tiny_index
+    corpus = idx.corpus()
+    q = idx.dataset.queries[:6]
+    cfg = dataclasses.replace(idx.config.search, beam_width=beam)
+    mask = np.asarray(tiny_store.mask(SPEC_MODERATE)) if masked else None
+
+    a = graph_search(corpus, q, cfg, idx.dataset.metric, node_mask=mask)
+    b = graph_search_stepped(corpus, q, cfg, idx.dataset.metric,
+                             node_mask=mask)
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"field {f} diverged between while_loop and stepped",
+        )
+
+
+def test_round_session_none_for_scan_plans(tiny_index, tiny_store):
+    """Bitmap-scan plans have no per-round structure: the planner declines a
+    session and callers fall back to whole-batch execution."""
+    s = Searcher.open(tiny_index, attributes=tiny_store)
+    plan = s.plan(SearchRequest(queries=tiny_index.dataset.queries[:1],
+                                filter=SPEC_SHARP))
+    assert plan.strategy == "scan"
+    assert s.planner.round_session(plan) is None
+
+
+def test_step_is_noop_on_quiesced_lanes(tiny_index):
+    """Stepping a fully-done state changes NO state leaf — free slots in a
+    continuous pool never burn rounds or drift."""
+    import jax
+
+    s = Searcher.open(tiny_index)
+    plan = s.plan(SearchRequest(queries=tiny_index.dataset.queries[:1]))
+    sess = s.planner.round_session(plan)
+    state = sess.init(tiny_index.dataset.queries[:4])
+    guard = tiny_index.config.search.max_rounds + 2
+    while sess.active(state).any():
+        state = sess.step(state)
+        guard -= 1
+        assert guard > 0
+    again = sess.step(state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(again)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
