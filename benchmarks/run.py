@@ -35,6 +35,7 @@ MODULES = [
     "continuous_bench",
     "kernels_bench",
     "roofline_bench",
+    "build_bench",
 ]
 
 # runs in its own subprocess (needs 512 host devices), not importable here

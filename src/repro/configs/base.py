@@ -249,6 +249,27 @@ class StreamConfig:
 
 
 @dataclass(frozen=True)
+class BuildConfig:
+    """Segmented out-of-core index build (``repro.core.segmented``).
+
+    ``segment_size == 0`` (default) builds the whole corpus as ONE segment —
+    the legacy monolithic pipeline, bit-identical to ``core.build_index``.
+    With ``segment_size > 0`` the corpus is consumed as a stream of
+    fixed-size segments: the PQ codebook is trained once on a bounded
+    reservoir sample, each segment gets its own proximity graph /
+    visit-frequency reordering / gap encoding (working set bounded by the
+    segment, not the corpus), and segments are cross-stitched through the
+    streaming insert machinery (``repro.stream.stitch``).
+    """
+    segment_size: int = 0             # 0 -> single segment (monolithic)
+    codebook_sample: int = 1 << 16    # reservoir cap for shared PQ training
+    stitch_sample: int = 32           # boundary anchors patched per segment
+    stitch_list_size: int = 0         # greedy-search list during stitching;
+                                      # 0 -> density-compensated
+                                      # build_list_size (x num_segments)
+
+
+@dataclass(frozen=True)
 class ShardConfig:
     """Multi-channel corpus partitioning (the shard layer, ``repro.shard``).
 
@@ -336,6 +357,7 @@ class ProximaConfig:
     graph: GraphConfig = field(default_factory=GraphConfig)
     search: SearchConfig = field(default_factory=SearchConfig)
     stream: StreamConfig = field(default_factory=StreamConfig)
+    build: BuildConfig = field(default_factory=BuildConfig)
     shard: ShardConfig = field(default_factory=ShardConfig)
     filter: FilterConfig = field(default_factory=FilterConfig)
     hot_node_fraction: float = 0.03   # paper default 3%

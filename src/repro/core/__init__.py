@@ -1,7 +1,13 @@
 """Proxima core: the paper's algorithmic contribution (Algorithm 1 + §III/§IV-E
 data-layout optimizations) as composable JAX modules."""
-from repro.core.dataset import Dataset, exact_knn, make_dataset, recall_at_k
-from repro.core.index import ProximaIndex, build_index
+from repro.core.dataset import (
+    ArraySegmentSource, Dataset, SyntheticSegmentSource, exact_knn,
+    exact_knn_stream, make_dataset, recall_at_k,
+)
+from repro.core.index import ProximaIndex, build_index, build_index_monolithic
+from repro.core.segmented import (
+    IndexSegment, SegmentedIndex, build_segmented,
+)
 from repro.core.search import (
     Corpus, SearchResult, SearchState, finalize_search, graph_search,
     graph_search_step, graph_search_stepped, init_search_state, search,
@@ -16,6 +22,13 @@ __all__ = [
     "recall_at_k",
     "ProximaIndex",
     "build_index",
+    "build_index_monolithic",
+    "build_segmented",
+    "SegmentedIndex",
+    "IndexSegment",
+    "ArraySegmentSource",
+    "SyntheticSegmentSource",
+    "exact_knn_stream",
     "Corpus",
     "SearchResult",
     "SearchState",

@@ -37,6 +37,11 @@ class Dataset:
     def dim(self) -> int:
         return self.base.shape[1]
 
+    def as_source(self, segment_size: int = 0) -> "ArraySegmentSource":
+        """View this (host-resident) corpus as a segment stream for the
+        out-of-core builder; ``segment_size == 0`` -> one segment."""
+        return ArraySegmentSource(self.base, segment_size)
+
 
 def _normalize(x: np.ndarray) -> np.ndarray:
     return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
@@ -72,6 +77,127 @@ def exact_knn(
         order = np.argsort(row, axis=1, kind="stable")
         out[s : s + chunk] = np.take_along_axis(idx, order, axis=1)
     return out
+
+
+class ArraySegmentSource:
+    """Fixed-size segment view over a host-resident array — the trivial
+    ``SegmentSource``.  The segmented builder (``repro.core.segmented``)
+    consumes any object with this four-member surface (``num_base``,
+    ``dim``, ``num_segments``, ``segment(s)``); out-of-core sources (e.g.
+    :class:`SyntheticSegmentSource`) generate each segment on demand so
+    nothing larger than one segment is ever resident."""
+
+    def __init__(self, base: np.ndarray, segment_size: int = 0):
+        self.base = base
+        self.segment_size = segment_size if segment_size > 0 else base.shape[0]
+
+    @property
+    def num_base(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.base.shape[1]
+
+    @property
+    def num_segments(self) -> int:
+        return max(1, -(-self.num_base // self.segment_size))
+
+    def bounds(self, s: int) -> tuple[int, int]:
+        lo = s * self.segment_size
+        return lo, min(lo + self.segment_size, self.num_base)
+
+    def segment(self, s: int) -> np.ndarray:
+        lo, hi = self.bounds(s)
+        return self.base[lo:hi]
+
+    def __iter__(self):
+        for s in range(self.num_segments):
+            yield self.segment(s)
+
+
+class SyntheticSegmentSource:
+    """Out-of-core synthetic corpus: segment ``s`` is a pure function of
+    ``(config, s)`` — a per-segment RNG stream seeded ``(seed, s)`` draws the
+    cluster assignments and noise — so iteration is restartable, order-
+    independent, and only the (num_clusters, dim) centre matrix plus ONE
+    segment is ever resident.  Gaussian-mixture (sift-like) geometry only;
+    queries come from the same mixture via :meth:`queries`."""
+
+    def __init__(self, cfg: DatasetConfig, segment_size: int):
+        if segment_size <= 0:
+            raise ValueError("SyntheticSegmentSource needs segment_size > 0")
+        self.config = cfg
+        self.segment_size = segment_size
+        self.metric = cfg.metric if cfg.metric else "l2"
+        rng = np.random.default_rng(cfg.seed)
+        self.centers = rng.standard_normal(
+            (cfg.num_clusters, cfg.dim)
+        ).astype(np.float32)
+
+    @property
+    def num_base(self) -> int:
+        return self.config.num_base
+
+    @property
+    def dim(self) -> int:
+        return self.config.dim
+
+    @property
+    def num_segments(self) -> int:
+        return max(1, -(-self.num_base // self.segment_size))
+
+    def bounds(self, s: int) -> tuple[int, int]:
+        lo = s * self.segment_size
+        return lo, min(lo + self.segment_size, self.num_base)
+
+    def segment(self, s: int) -> np.ndarray:
+        cfg = self.config
+        lo, hi = self.bounds(s)
+        rng = np.random.default_rng((cfg.seed, s))
+        assign = rng.integers(0, cfg.num_clusters, size=hi - lo)
+        noise = cfg.cluster_std * rng.standard_normal((hi - lo, cfg.dim))
+        return (self.centers[assign] + noise).astype(np.float32)
+
+    def __iter__(self):
+        for s in range(self.num_segments):
+            yield self.segment(s)
+
+    def queries(self, num_queries: int) -> np.ndarray:
+        cfg = self.config
+        rng = np.random.default_rng((cfg.seed, -1))
+        qa = rng.integers(0, cfg.num_clusters, size=num_queries)
+        noise = cfg.cluster_std * rng.standard_normal((num_queries, cfg.dim))
+        return (self.centers[qa] + noise).astype(np.float32)
+
+
+def exact_knn_stream(
+    queries: np.ndarray, source, k: int, metric: str
+) -> np.ndarray:
+    """Exact kNN against a segment source without materializing the corpus:
+    per-segment brute-force top-k (global ids) merged across segments.  The
+    streaming twin of :func:`exact_knn` — identical answers on an
+    ``ArraySegmentSource`` over the same base."""
+    k = min(k, source.num_base)
+    nq = queries.shape[0]
+    best_ids = np.full((nq, k), -1, np.int64)
+    best_d = np.full((nq, k), np.inf, np.float64)
+    for s in range(source.num_segments):
+        seg = source.segment(s)
+        lo, _ = source.bounds(s)
+        ks = min(k, seg.shape[0])
+        ids = exact_knn(queries, seg, ks, metric).astype(np.int64) + lo
+        d = np.take_along_axis(
+            pairwise_dist(queries, seg, metric).astype(np.float64),
+            ids - lo, axis=1,
+        )
+        cat_ids = np.concatenate([best_ids, ids], axis=1)
+        cat_d = np.concatenate([best_d, d], axis=1)
+        cat_d = np.where(cat_ids < 0, np.inf, cat_d)
+        order = np.argsort(cat_d, axis=1, kind="stable")[:, :k]
+        best_ids = np.take_along_axis(cat_ids, order, axis=1)
+        best_d = np.take_along_axis(cat_d, order, axis=1)
+    return best_ids.astype(np.int32)
 
 
 def make_dataset(cfg: DatasetConfig, k_gt: int = 100) -> Dataset:

@@ -22,10 +22,8 @@ from repro.core.gap_encoding import GapEncodedGraph, gap_encode
 from repro.core.graph import Graph, build_graph
 from repro.core.reorder import (
     Reordering,
-    apply_reordering,
     remap_ground_truth,
-    reorder_graph,
-    trace_visit_frequency,
+    reorder_segment,
 )
 from repro.core.search import Corpus, l2_normalize
 
@@ -73,11 +71,12 @@ class ProximaIndex:
         group) for the channel-parallel serving path; see ``repro.shard``.
         Defaults come from ``config.shard``. Returns (TiledCorpus,
         TilePartition)."""
-        from repro.configs.base import ShardConfig
+        from repro.configs.base import upgrade_config
         from repro.shard import partition_index
 
-        # getattr: configs unpickled from pre-shard-layer caches lack .shard
-        sc = getattr(self.config, "shard", None) or ShardConfig()
+        # configs unpickled from pre-shard-layer caches lack .shard;
+        # upgrade_config fills every missing section with its default
+        sc = upgrade_config(self.config).shard
         return partition_index(
             self,
             num_tiles=sc.num_tiles if num_tiles is None else num_tiles,
@@ -105,13 +104,19 @@ class ProximaIndex:
         }
 
 
-def build_index(
+def build_index_monolithic(
     cfg: ProximaConfig,
     dataset: Optional[Dataset] = None,
     graph_method: str = "knn_prune",
     reorder_samples: int = 128,
     calibrate: bool = False,
 ) -> ProximaIndex:
+    """Legacy single-pass pipeline: the WHOLE corpus is resident (base,
+    graph, codes) throughout the build.  Kept as the independent reference
+    implementation the CI equivalence suite compares the segmented builder's
+    single-segment path against (tests/test_segmented.py); production code
+    should call :func:`build_index` or ``repro.core.segmented.
+    build_segmented``."""
     ds = dataset if dataset is not None else make_dataset(cfg.dataset)
     metric = ds.metric
 
@@ -125,16 +130,16 @@ def build_index(
     # --- graph on full-precision coordinates
     graph = build_graph(ds.base, cfg.graph, metric, method=graph_method)
 
-    # --- reordering + hot nodes (§IV-E)
+    # --- reordering + hot nodes (§IV-E); enc_in is permuted ALONGSIDE
+    # base/codes — it feeds calibrate_beta below, which indexes codes and
+    # enc_in by the same row
     reordering = None
     if cfg.hot_node_fraction > 0:
-        freq = trace_visit_frequency(
-            graph, enc_in, codes, codebook.centroids, cfg.search, metric,
-            num_samples=reorder_samples, seed=cfg.dataset.seed,
+        graph, new_base, enc_in, codes, reordering = reorder_segment(
+            graph, ds.base, enc_in, codes, codebook.centroids, cfg.search,
+            metric, cfg.hot_node_fraction, num_samples=reorder_samples,
+            seed=cfg.dataset.seed,
         )
-        graph, reordering = reorder_graph(graph, freq, cfg.hot_node_fraction)
-        (new_base,) = apply_reordering(reordering, ds.base)
-        (codes,) = apply_reordering(reordering, codes)
         ds = Dataset(
             base=new_base,
             queries=ds.queries,
@@ -161,3 +166,28 @@ def build_index(
         reordering=reordering,
         calibrated_beta=beta,
     )
+
+
+def build_index(
+    cfg: ProximaConfig,
+    dataset: Optional[Dataset] = None,
+    graph_method: str = "knn_prune",
+    reorder_samples: int = 128,
+    calibrate: bool = False,
+) -> ProximaIndex:
+    """Build a flat index — a thin SINGLE-SEGMENT wrapper over the segmented
+    out-of-core builder (``repro.core.segmented.build_segmented``), bit-
+    identical to :func:`build_index_monolithic` (same adjacency, codes,
+    reordering, beta; enforced by tests/test_segmented.py).  For corpora
+    larger than host memory, call ``build_segmented`` with
+    ``BuildConfig.segment_size > 0`` directly."""
+    from repro.core.segmented import build_segmented
+
+    return build_segmented(
+        cfg,
+        dataset=dataset,
+        graph_method=graph_method,
+        reorder_samples=reorder_samples,
+        calibrate=calibrate,
+        segment_size=0,                 # one segment == the legacy pipeline
+    ).to_flat()

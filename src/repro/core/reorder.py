@@ -75,6 +75,33 @@ def reorder_graph(
     return g2, Reordering(perm=perm, inv=inv, hot_count=hot_count)
 
 
+def reorder_segment(
+    graph: Graph,
+    base: np.ndarray,
+    enc_in: np.ndarray,
+    codes: np.ndarray,
+    centroids: np.ndarray,
+    cfg: SearchConfig,
+    metric: str,
+    hot_fraction: float,
+    num_samples: int = 128,
+    seed: int = 0,
+) -> tuple:
+    """Trace -> renumber -> permute EVERY row-aligned array of one built
+    segment (base, the encoder input, and the PQ codes together — permuting
+    a subset is exactly the row-misalignment bug ``calibrate_beta`` used to
+    hit).  Shared by the monolithic pipeline (one segment = the corpus) and
+    the segmented builder.  Returns ``(graph, base, enc_in, codes,
+    Reordering)``."""
+    freq = trace_visit_frequency(
+        graph, enc_in, codes, centroids, cfg, metric,
+        num_samples=num_samples, seed=seed,
+    )
+    graph, reord = reorder_graph(graph, freq, hot_fraction)
+    base, enc_in, codes = apply_reordering(reord, base, enc_in, codes)
+    return graph, base, enc_in, codes, reord
+
+
 def apply_reordering(reord: Reordering, *arrays: np.ndarray) -> tuple:
     """Permute data arrays (base, codes, ...) into the new id space."""
     return tuple(a[reord.inv] for a in arrays)

@@ -1,0 +1,359 @@
+"""Segmented out-of-core index build — the billion-scale blocker breaker.
+
+``core.index.build_index`` materializes the whole corpus (full-precision
+base, full n-squared kNN temporaries, full graph) in host memory, so corpus
+size is bounded by ONE host's RAM.  ``build_segmented`` consumes the corpus
+as a stream of fixed-size segments instead:
+
+    pass 1   reservoir-sample the stream  ->  ONE shared PQ codebook
+             (bounded by ``BuildConfig.codebook_sample`` rows)
+    pass 2   per segment: PQ-encode -> proximity graph (density-compensated
+             ``build_list_size``, see ``core.graph.compensated_build_cfg``)
+             -> visit-frequency reordering -> gap encoding.  The expensive
+             temporaries (the kNN distance matrix is O(n_seg * n)) are
+             bounded by the SEGMENT, not the corpus.
+    stitch   cross-segment boundary patching through the streaming insert
+             machinery (``repro.stream.stitch``) -> one navigable global
+             graph for flat serving.
+    emit     segments ARE channel tiles (``shard.tiles_from_segments``) with
+             segment centroids as IVF-style routing metadata — sharded
+             serving no longer takes the build-flat-then-repartition detour.
+
+A single-segment build is bit-identical to the legacy monolithic pipeline
+(``build_index_monolithic``): same codebook (the reservoir is bypassed — one
+segment is already fully resident), same graph config (compensation factor
+1 is the identity), same reorder trace seed, same beta.  ``build_index`` is
+the thin wrapper ``build_segmented(...).to_flat()``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ProximaConfig, upgrade_config
+from repro.core import pq as pq_mod
+from repro.core.dataset import Dataset, make_dataset
+from repro.core.gap_encoding import GapEncodedGraph, gap_encode
+from repro.core.graph import Graph, build_graph, compensated_build_cfg
+from repro.core.index import ProximaIndex
+from repro.core.reorder import Reordering, reorder_segment
+
+
+@dataclass
+class IndexSegment:
+    """One built segment: a self-contained mini-index over the contiguous
+    global-id block ``[start, start + num_vertices)``.  The graph lives in
+    LOCAL (segment-reordered) ids — exactly what a channel tile serves."""
+    start: int                          # global id offset of this block
+    graph: Graph                        # local ids, reordered within segment
+    base: np.ndarray                    # (n_s, D) f32, reordered
+    codes: np.ndarray                   # (n_s, M) uint8, reordered
+    gap: Optional[GapEncodedGraph]
+    reordering: Optional[Reordering]    # source-local -> built-local
+    centroid: np.ndarray                # (D,) mean in SEARCH geometry —
+                                        # the router's coarse index entry
+
+    @property
+    def num_vertices(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def hot_count(self) -> int:
+        return self.reordering.hot_count if self.reordering else 0
+
+
+@dataclass
+class SegmentedIndex:
+    """A segment-built index: shared codebook + per-segment mini-indexes +
+    (multi-segment only) the cross-stitched global graph.  Serve it tiled
+    via :meth:`tiled_corpus` / ``plan.Searcher.open``, or flatten with
+    :meth:`to_flat` for the legacy single-corpus paths."""
+    config: ProximaConfig
+    codebook: pq_mod.PQCodebook
+    segments: List[IndexSegment]
+    metric: str
+    calibrated_beta: float
+    stitch: Optional[object] = None     # stream.stitch.StitchResult (S > 1)
+    dataset: Optional[Dataset] = None   # queries/gt in SOURCE id space
+    graph_method: str = "knn_prune"
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def num_base(self) -> int:
+        return sum(s.num_vertices for s in self.segments)
+
+    # ------------------------------------------------------------- routing
+    def segment_centroids(self) -> np.ndarray:
+        """(S, D) routing metadata: each segment's centroid in search
+        geometry — the IVF-style coarse index ``shard.route_queries``
+        selects entry tiles with."""
+        return np.stack([s.centroid for s in self.segments]).astype(np.float32)
+
+    def global_perm(self) -> np.ndarray:
+        """(N,) source global id -> built global id.  Segments keep their
+        contiguous block; the per-segment visit-frequency reordering
+        permutes WITHIN the block."""
+        perm = np.empty(self.num_base, np.int32)
+        for seg in self.segments:
+            n = seg.num_vertices
+            local = seg.reordering.perm if seg.reordering is not None \
+                else np.arange(n, dtype=np.int32)
+            perm[seg.start : seg.start + n] = seg.start + local
+        return perm
+
+    # ------------------------------------------------------------ emission
+    def to_flat(self) -> ProximaIndex:
+        """Flatten to a legacy ``ProximaIndex``.  Single segment: the exact
+        monolithic artifacts (graph/codes/reordering/beta bit-identical).
+        Multi-segment: the stitched global graph over the concatenated
+        blocks (per-segment hot prefixes are NOT a global hot prefix, so
+        ``reordering`` is None and ``hot_count`` is 0 — serve multi-segment
+        builds tiled to keep hot-node accounting)."""
+        cfg = self.config
+        if self.num_segments == 1:
+            seg = self.segments[0]
+            ds = self._flat_dataset(seg.base, seg.reordering)
+            return ProximaIndex(
+                config=cfg, dataset=ds, graph=seg.graph,
+                codebook=self.codebook, codes=seg.codes, gap=seg.gap,
+                reordering=seg.reordering,
+                calibrated_beta=self.calibrated_beta,
+            )
+        if self.stitch is None:
+            raise ValueError(
+                "multi-segment index was built without stitching — cannot "
+                "flatten to a navigable single graph"
+            )
+        base = np.concatenate([s.base for s in self.segments])
+        codes = np.concatenate([s.codes for s in self.segments])
+        graph = self.stitch.graph
+        gap = gap_encode(graph.adjacency) if cfg.gap_encode else None
+        ds = self._flat_dataset(base, None, perm=self.global_perm())
+        return ProximaIndex(
+            config=cfg, dataset=ds, graph=graph, codebook=self.codebook,
+            codes=codes, gap=gap, reordering=None,
+            calibrated_beta=self.calibrated_beta,
+        )
+
+    def _flat_dataset(self, base, reordering, perm=None) -> Dataset:
+        from repro.core.reorder import remap_ground_truth
+
+        if self.dataset is None:
+            d = base.shape[1]
+            return Dataset(
+                base=base, queries=np.zeros((0, d), np.float32),
+                gt=np.zeros((0, 1), np.int32), metric=self.metric,
+                config=self.config.dataset,
+            )
+        gt = self.dataset.gt
+        if reordering is not None:
+            gt = remap_ground_truth(reordering, gt)
+        elif perm is not None:
+            gt = perm[gt]
+        return Dataset(
+            base=base, queries=self.dataset.queries, gt=gt,
+            metric=self.dataset.metric, config=self.dataset.config,
+        )
+
+    def tiled_corpus(self):
+        """Direct-to-tile emission: (TiledCorpus, TilePartition) with one
+        tile per segment — see ``shard.tiles_from_segments``."""
+        from repro.shard import tiles_from_segments
+
+        return tiles_from_segments(self)
+
+    # ---------------------------------------------------------- accounting
+    def index_bytes(self) -> dict:
+        """Per-segment storage accounting plus corpus totals — the same
+        categories as ``ProximaIndex.index_bytes`` with a ``per_segment``
+        breakdown; single-segment totals equal the flat build's exactly."""
+        per = []
+        for seg in self.segments:
+            n, r = seg.graph.adjacency.shape
+            idx_raw = n * r * 4
+            idx_gap = seg.gap.encoded_bytes if seg.gap else idx_raw
+            pq_bytes = seg.codes.nbytes
+            hot_extra = seg.hot_count * r * seg.codes.shape[1]
+            per.append({
+                "raw_bytes": seg.base.nbytes,
+                "index_bytes_uncompressed": idx_raw,
+                "index_bytes_gap": idx_gap,
+                "pq_bytes": pq_bytes,
+                "hot_repetition_bytes": hot_extra,
+                "total_bytes": seg.base.nbytes + idx_gap + pq_bytes + hot_extra,
+            })
+        totals = {k: sum(p[k] for p in per) for k in per[0]}
+        totals["per_segment"] = per
+        return totals
+
+    def build_trace(self, index_bits: int = 32):
+        """Build-time NAND workload: per-segment program volume plus the
+        adjacency rows stitching re-programmed (the build-side write
+        amplification) — feed to ``nand.simulate_build``."""
+        from repro.nand.simulator import BuildTrace
+
+        return BuildTrace(
+            segment_sizes=tuple(s.num_vertices for s in self.segments),
+            stitched_rows=self.stitch.patched_rows if self.stitch else 0,
+            dim=self.segments[0].base.shape[1],
+            r_degree=self.config.graph.max_degree,
+            index_bits=index_bits,
+            pq_bits=8 * self.segments[0].codes.shape[1],
+        )
+
+
+def reservoir_sample(source, cap: int, seed: int = 0) -> np.ndarray:
+    """Algorithm-R over a segment stream: a uniform sample of
+    ``min(cap, N)`` rows in one pass with O(cap) memory.  Vectorized per
+    segment — replacement indices are drawn for a whole segment at once and
+    applied in order (NumPy fancy assignment is last-write-wins), which is
+    exactly the sequential algorithm."""
+    rng = np.random.default_rng(seed)
+    cap = min(cap, source.num_base)
+    buf = np.empty((cap, source.dim), np.float32)
+    seen = 0
+    for seg in source:
+        seg = np.asarray(seg, np.float32)
+        m = seg.shape[0]
+        take = min(max(cap - seen, 0), m)
+        if take:
+            buf[seen : seen + take] = seg[:take]
+        if take < m:
+            rest = seg[take:]
+            pos = seen + take + np.arange(rest.shape[0])
+            j = rng.integers(0, pos + 1)
+            keep = j < cap
+            buf[j[keep]] = rest[keep]
+        seen += m
+    return buf
+
+
+def _build_segment(
+    start: int,
+    seg_base: np.ndarray,
+    codebook: pq_mod.PQCodebook,
+    cfg: ProximaConfig,
+    metric: str,
+    num_segments: int,
+    seg_idx: int,
+    graph_method: str,
+    reorder_samples: int,
+) -> tuple:
+    """The monolithic pipeline applied to ONE segment (encode -> graph ->
+    reorder -> gap); with ``num_segments == 1`` every step degenerates to
+    the legacy build exactly.  Returns ``(IndexSegment, enc_in)`` — the
+    (reordered) encoder input is only kept when the caller calibrates."""
+    enc_in = seg_base
+    if metric == "angular":
+        enc_in = enc_in / np.maximum(
+            np.linalg.norm(enc_in, axis=-1, keepdims=True), 1e-12
+        )
+    codes = np.asarray(
+        pq_mod.encode(jnp.asarray(enc_in), jnp.asarray(codebook.centroids))
+    )
+
+    # each segment holds a 1/S sample of every cluster -> compensate the
+    # build neighbourhood (identity for a single segment)
+    gcfg = compensated_build_cfg(cfg.graph, num_segments, seg_base.shape[0])
+    graph = build_graph(seg_base, gcfg, metric, method=graph_method)
+
+    reordering = None
+    if cfg.hot_node_fraction > 0:
+        # segment 0 keeps the legacy trace seed (single-segment bit-
+        # identity); later segments decorrelate their trace samples
+        seed = cfg.dataset.seed + (seg_idx if num_segments > 1 else 0)
+        graph, seg_base, enc_in, codes, reordering = reorder_segment(
+            graph, seg_base, enc_in, codes, codebook.centroids, cfg.search,
+            metric, cfg.hot_node_fraction, num_samples=reorder_samples,
+            seed=seed,
+        )
+
+    gap = gap_encode(graph.adjacency) if cfg.gap_encode else None
+    cent_in = enc_in if metric == "angular" else seg_base
+    seg = IndexSegment(
+        start=start, graph=graph, base=seg_base, codes=codes, gap=gap,
+        reordering=reordering,
+        centroid=cent_in.mean(0).astype(np.float32),
+    )
+    return seg, enc_in
+
+
+def build_segmented(
+    cfg: ProximaConfig,
+    source=None,
+    dataset: Optional[Dataset] = None,
+    graph_method: str = "knn_prune",
+    reorder_samples: int = 128,
+    calibrate: bool = False,
+    segment_size: Optional[int] = None,
+) -> SegmentedIndex:
+    """Build a :class:`SegmentedIndex` from a segment ``source`` (any object
+    with ``num_base``/``dim``/``num_segments``/``segment(s)``/``bounds(s)``,
+    e.g. ``core.dataset.ArraySegmentSource`` or ``SyntheticSegmentSource``).
+
+    With no ``source``, the ``dataset`` (or ``make_dataset(cfg.dataset)``)
+    is viewed through ``Dataset.as_source``; ``segment_size`` overrides
+    ``cfg.build.segment_size`` (0 -> one segment, the legacy pipeline)."""
+    bc = upgrade_config(cfg).build
+    ds = dataset
+    if source is None:
+        if ds is None:
+            ds = make_dataset(cfg.dataset)
+        sz = bc.segment_size if segment_size is None else segment_size
+        source = ds.as_source(sz)
+    metric = ds.metric if ds is not None else (
+        getattr(source, "metric", None) or cfg.dataset.metric or "l2"
+    )
+    num_segments = source.num_segments
+
+    # --- pass 1: shared PQ codebook on a bounded reservoir sample.  ONE
+    # segment is already fully resident, so the reservoir is bypassed and
+    # the codebook is trained on exactly the legacy input.
+    if num_segments == 1:
+        sample = np.asarray(source.segment(0), np.float32)
+    else:
+        sample = reservoir_sample(source, bc.codebook_sample, cfg.pq.seed)
+    codebook = pq_mod.train_pq(sample, cfg.pq, metric)
+    del sample
+
+    # --- pass 2: per-segment encode/graph/reorder/gap
+    segments: List[IndexSegment] = []
+    enc_ins: List[np.ndarray] = []
+    for s in range(num_segments):
+        seg_base = np.asarray(source.segment(s), np.float32)
+        lo, _ = source.bounds(s)
+        seg, enc_in = _build_segment(
+            lo, seg_base, codebook, cfg, metric, num_segments, s,
+            graph_method, reorder_samples,
+        )
+        segments.append(seg)
+        if calibrate:
+            enc_ins.append(enc_in)
+
+    # --- cross-segment stitching (streaming insert machinery)
+    stitch = None
+    if num_segments > 1:
+        from repro.stream.stitch import stitch_segments
+
+        stitch = stitch_segments(segments, metric, cfg.graph, bc)
+
+    beta = cfg.search.beta
+    if calibrate:
+        rng = np.random.default_rng(cfg.dataset.seed)
+        codes_all = segments[0].codes if num_segments == 1 \
+            else np.concatenate([g.codes for g in segments])
+        enc_all = enc_ins[0] if num_segments == 1 \
+            else np.concatenate(enc_ins)
+        beta = pq_mod.calibrate_beta(codebook, codes_all, enc_all, rng)
+
+    return SegmentedIndex(
+        config=cfg, codebook=codebook, segments=segments, metric=metric,
+        calibrated_beta=beta, stitch=stitch, dataset=ds,
+        graph_method=graph_method,
+    )

@@ -53,6 +53,10 @@ class IndexCapabilities:
     num_tiles: int = 1
     has_attributes: bool = False
     mesh_devices: int = 0            # device count (distributed targets)
+    segments: int = 0                # >0: segment-built index served through
+                                     # direct-emitted tiles (one per build
+                                     # segment), with segment centroids as
+                                     # the router's coarse index
 
 
 @dataclasses.dataclass(frozen=True)

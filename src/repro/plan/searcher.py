@@ -25,7 +25,7 @@ import warnings
 from typing import Any, Optional
 
 from repro.configs.base import (
-    FilterConfig, PlanConfig, SearchConfig, ShardConfig,
+    FilterConfig, PlanConfig, SearchConfig,
 )
 from repro.obs import Observability
 from repro.plan.planner import (
@@ -131,6 +131,8 @@ class Searcher:
             return cls._open_corpus(index, pc, metric, attributes, obs)
         if _is_tiled(index):
             return cls._open_tiled(index, pc, metric, attributes, obs)
+        if _is_segmented(index):
+            return cls._open_segmented(index, pc, metric, attributes, obs)
         return cls._open_index(index, pc, metric, attributes, obs)
 
     # -- target-specific constructors (mirror the legacy engine branches) ----
@@ -157,7 +159,10 @@ class Searcher:
         metric = metric or index.dataset.metric
         fcfg = pc.filter or getattr(index.config, "filter", None) \
             or FilterConfig()
-        shard_cfg = getattr(index.config, "shard", None) or ShardConfig()
+        from repro.configs.base import upgrade_config
+
+        # pre-shard-layer pickled configs lack .shard; upgrade explicitly
+        shard_cfg = upgrade_config(index.config).shard
         n_tiles = shard_cfg.num_tiles if pc.num_tiles is None else pc.num_tiles
         policy = shard_cfg.policy if pc.shard_policy is None \
             else pc.shard_policy
@@ -192,7 +197,9 @@ class Searcher:
         metric = metric or base.dataset.metric
         fcfg = pc.filter or getattr(base.config, "filter", None) \
             or FilterConfig()
-        shard_cfg = getattr(base.config, "shard", None) or ShardConfig()
+        from repro.configs.base import upgrade_config
+
+        shard_cfg = upgrade_config(base.config).shard
         probe = shard_cfg.probe_tiles if pc.probe_tiles is None \
             else pc.probe_tiles
         if attributes is not None:
@@ -251,6 +258,37 @@ class Searcher:
         )
         return cls(planner=planner, plan_cfg=pc,
                    num_tiles=tiled.num_tiles)
+
+    @classmethod
+    def _open_segmented(cls, seg_index, pc, metric, attributes, obs):
+        """A segment-built index (``core.segmented.SegmentedIndex``) is
+        tiled-capable BY CONSTRUCTION: its segments are emitted as tiles
+        directly (``shard.tiles_from_segments`` — no repartition, no per-
+        tile graph rebuild) and its segment centroids are the router's
+        coarse index, so ``probe_tiles`` routing works out of the box."""
+        from repro.configs.base import upgrade_config
+
+        cfg_full = upgrade_config(seg_index.config)
+        scfg = cls._resolve_cfg(pc, cfg_full.search)
+        metric = metric or seg_index.metric
+        fcfg = pc.filter or cfg_full.filter
+        probe = cfg_full.shard.probe_tiles if pc.probe_tiles is None \
+            else pc.probe_tiles
+        attributes = validate_attribute_store(
+            attributes, seg_index.num_base, "segmented index")
+        tiled, _ = seg_index.tiled_corpus()
+        n_segments = seg_index.num_segments
+        caps = IndexCapabilities(
+            kind="tiled", tiled=True, num_tiles=n_segments,
+            has_attributes=attributes is not None, segments=n_segments,
+        )
+        planner = QueryPlanner(
+            capabilities=caps, cfg=scfg, metric=metric, filter_cfg=fcfg,
+            plan_cfg=pc, tiled=tiled, attributes=attributes,
+            probe_tiles=probe, obs=obs,
+        )
+        return cls(planner=planner, plan_cfg=pc, index=seg_index,
+                   num_tiles=n_segments, shard_policy="segments")
 
     @classmethod
     def _open_distributed(cls, dcorpus, pc, metric, mesh, obs):
@@ -350,3 +388,10 @@ def _is_tiled(obj) -> bool:
 
 def _is_sharded_corpus(obj) -> bool:
     return hasattr(obj, "num_shards") and hasattr(obj, "hot_adjacency")
+
+
+def _is_segmented(obj) -> bool:
+    """Segment-built index: per-segment mini-indexes + shared codebook,
+    no single flat graph (``core.segmented.SegmentedIndex``)."""
+    return hasattr(obj, "segments") and hasattr(obj, "codebook") \
+        and not hasattr(obj, "graph")

@@ -3,7 +3,9 @@
 (one per NAND channel group), each tile carries its own proximity graph and
 entry point, hot nodes and PQ centroids are replicated on every tile, and a
 query fans out to all tiles in parallel before a cross-tile top-k merge."""
-from repro.shard.partition import TiledCorpus, TilePartition, partition_index
+from repro.shard.partition import (
+    TiledCorpus, TilePartition, partition_index, tiles_from_segments,
+)
 from repro.shard.search import (
     ShardedSearchResult,
     cross_tile_merge,
@@ -16,6 +18,7 @@ __all__ = [
     "TiledCorpus",
     "TilePartition",
     "partition_index",
+    "tiles_from_segments",
     "ShardedSearchResult",
     "cross_tile_merge",
     "route_queries",

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GraphConfig
-from repro.core.graph import build_graph
+from repro.core.graph import build_graph, compensated_build_cfg
 
 POLICIES = ("contiguous", "hash", "cluster")
 
@@ -129,11 +129,84 @@ def assign_cold(
     raise ValueError(f"unknown shard policy {policy!r}; choose from {POLICIES}")
 
 
+def _is_segment_built(index) -> bool:
+    """Duck-type a ``core.segmented.SegmentedIndex`` (per-segment graphs +
+    shared codebook, no single flat graph)."""
+    return hasattr(index, "segments") and hasattr(index, "codebook") \
+        and not hasattr(index, "graph")
+
+
+def tiles_from_segments(seg_index) -> tuple[TiledCorpus, TilePartition]:
+    """Direct-to-tile emission: every built segment IS a channel tile.
+
+    The segmented builder already produced exactly what a tile needs — a
+    local-id proximity graph, reordered codes/base, an entry point, a
+    centroid — so sharded serving skips the build-flat-then-repartition
+    detour (and its per-tile graph REBUILD) entirely.  Segment centroids
+    become ``tile_centroids``, the router's IVF-style coarse index.
+
+    Per-segment hot prefixes surface as ``hot_counts`` (hot-hit accounting
+    inside each tile) but are NOT replicas: every global id lives on exactly
+    one tile, so ``TilePartition.hot_count`` — the replicated-prefix length —
+    is 0 and the cross-tile merge's duplicate masking is a no-op.
+    """
+    segs = seg_index.segments
+    p_tiles = len(segs)
+    metric = seg_index.metric
+    nt = max(s.num_vertices for s in segs)
+    r = segs[0].graph.max_degree
+    m = segs[0].codes.shape[1]
+    d = segs[0].base.shape[1]
+
+    adjacency = np.zeros((p_tiles, nt, r), np.int32)
+    codes = np.zeros((p_tiles, nt, m), np.uint8)
+    base = np.zeros((p_tiles, nt, d), np.float32)
+    tile_ids = np.full((p_tiles, nt), -1, np.int32)
+    entries = np.zeros((p_tiles,), np.int32)
+    hot_counts = np.zeros((p_tiles,), np.int32)
+    tile_cents = np.zeros((p_tiles, d), np.float32)
+    tile_of = np.empty((seg_index.num_base,), np.int32)
+
+    for p, seg in enumerate(segs):
+        k = seg.num_vertices
+        sb = seg.base
+        if metric == "angular":
+            sb = sb / np.maximum(
+                np.linalg.norm(sb, axis=-1, keepdims=True), 1e-12
+            )
+        adjacency[p, :k] = seg.graph.adjacency
+        codes[p, :k] = seg.codes
+        base[p, :k] = sb
+        tile_ids[p, :k] = seg.start + np.arange(k, dtype=np.int32)
+        entries[p] = seg.graph.entry_point
+        hot_counts[p] = seg.hot_count
+        tile_cents[p] = seg.centroid
+        tile_of[seg.start : seg.start + k] = p
+
+    part = TilePartition(
+        policy="segments", num_tiles=p_tiles, hot_count=0,
+        tile_of_cold=tile_of,
+        tile_sizes=np.asarray([s.num_vertices for s in segs], np.int64),
+    )
+    tiled = TiledCorpus(
+        adjacency=jnp.asarray(adjacency),
+        codes=jnp.asarray(codes),
+        base=jnp.asarray(base),
+        centroids=jnp.asarray(seg_index.codebook.centroids),
+        entry_points=jnp.asarray(entries),
+        hot_counts=jnp.asarray(hot_counts),
+        tile_ids=jnp.asarray(tile_ids),
+        tile_centroids=jnp.asarray(tile_cents),
+    )
+    return tiled, part
+
+
 def partition_index(
     index,
-    num_tiles: int,
+    num_tiles: int | None = None,
     policy: str = "contiguous",
     replicate_hot: bool = True,
+    from_segments: bool = False,
 ) -> tuple[TiledCorpus, TilePartition]:
     """Split a built ``ProximaIndex`` into ``num_tiles`` search tiles.
 
@@ -142,7 +215,16 @@ def partition_index(
     channel layout, analogous to the paper's graph-data preloading phase.
     ``num_tiles == 1`` reuses the index's own graph unchanged, so the
     single-tile path is bit-identical to ``index.corpus()``.
+
+    A segment-built index (``core.segmented.SegmentedIndex``, or
+    ``from_segments=True``) takes the direct-emission path instead: its
+    segments become the tiles verbatim (:func:`tiles_from_segments`), no
+    rebuild, ``num_tiles``/``policy`` ignored.
     """
+    if from_segments or _is_segment_built(index):
+        return tiles_from_segments(index)
+    if num_tiles is None:
+        raise ValueError("num_tiles is required for a flat ProximaIndex")
     if num_tiles < 1:
         raise ValueError("num_tiles must be >= 1")
     n = index.dataset.num_base
@@ -203,27 +285,16 @@ def partition_index(
     entries = np.zeros((num_tiles,), np.int32)
     tile_cents = np.zeros((num_tiles, d), np.float32)
 
-    # Density compensation (the inverse of MutableIndex.consolidate's rule):
-    # a tile holds a 1/P sample of every cluster, so intra-cluster gaps grow
-    # and a kNN list of the global size turns purely local — the tile graph
-    # loses the long-range edges greedy search needs. Scaling the build
-    # neighbourhood by P keeps per-tile navigability at the global level
-    # (measured: contiguous halves drop to ~0.69 greedy recall at the global
-    # build_list_size and recover to ~0.95+ when scaled).
+    # Density compensation (the inverse of MutableIndex.consolidate's rule);
+    # shared with the segmented builder — see core.graph.compensated_build_cfg.
     graph_cfg: GraphConfig = index.config.graph
     for p, ids in enumerate(tiles_global):
         k = len(ids)
-        # the nt//4 floor covers the cluster policy, whose tiles keep whole
+        # the k//4 floor covers the cluster policy, whose tiles keep whole
         # geometric clusters at full density: there the P-scaled list can
         # still sit inside one cluster, so tie the neighbourhood to the tile
         # size itself to guarantee inter-cluster reach
-        tile_cfg = dataclasses.replace(
-            graph_cfg,
-            build_list_size=min(
-                max(graph_cfg.build_list_size * num_tiles, k // 4),
-                max(k - 1, 1),
-            ),
-        )
+        tile_cfg = compensated_build_cfg(graph_cfg, num_tiles, k, floor=k // 4)
         # rebuild the tile's proximity graph over its own vertex set; the
         # graph lives in tile-local ids so the unmodified search engine
         # never emits a cross-channel address

@@ -16,6 +16,8 @@ from repro.stream.mutable import MutableIndex
 from repro.stream.searcher import (
     MergedResult, merged_search_kernel, search_merged,
 )
+from repro.stream.stitch import StitchResult, stitch_segments
 
 __all__ = ["DeltaSegment", "MutableIndex", "MergedResult",
-           "merged_search_kernel", "search_merged"]
+           "merged_search_kernel", "search_merged",
+           "StitchResult", "stitch_segments"]

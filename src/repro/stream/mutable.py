@@ -20,7 +20,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.configs.base import ProximaConfig, ShardConfig, StreamConfig
+from repro.configs.base import ProximaConfig, StreamConfig
 from repro.core.dataset import Dataset, exact_knn
 from repro.core.index import ProximaIndex, build_index
 from repro.stream.delta import DeltaSegment
@@ -56,8 +56,11 @@ class MutableIndex:
         self._corpus = None
         # multi-channel base serving: the frozen base goes tiled, the delta
         # segment stays global (it is DRAM-resident; see stream.searcher).
-        # getattr: configs unpickled from pre-shard-layer caches lack .shard
-        shard_cfg = getattr(index.config, "shard", None) or ShardConfig()
+        # configs unpickled from pre-shard-layer caches lack .shard —
+        # upgrade_config fills every missing section with its default
+        from repro.configs.base import upgrade_config
+
+        shard_cfg = upgrade_config(index.config).shard
         self.num_tiles = shard_cfg.num_tiles
         self.shard_policy = shard_cfg.policy
         self._tiled = None

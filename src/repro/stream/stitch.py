@@ -1,0 +1,173 @@
+"""Cross-segment stitching: patch per-segment graphs into ONE navigable
+global graph with the streaming insert machinery.
+
+The segmented builder (``core.segmented``) emits S independent graphs over
+contiguous global-id blocks — block-diagonal, mutually unreachable.  This
+module replays ``stream.DeltaSegment``'s insert recipe across segment
+boundaries: segments join the union one at a time, and each joining
+segment's boundary ANCHORS (its entry point, a slice of its hot prefix, and
+a random sample) are greedy-searched against the already-stitched union,
+their neighbour lists merged with the cross-segment candidates through the
+Vamana robust-prune rule, and the kept cross edges reverse-patched
+(re-pruning rows that overflow ``max_degree``) — exactly
+``DeltaSegment.insert`` with a whole segment playing the delta.
+
+The greedy-search list is density-compensated (``build_list_size`` scaled by
+the segment count, the same rule tile graphs use) so stitch edges span the
+global geometry, not one segment's local sample.  A final BFS check repairs
+any vertex the anchor edges left unreachable (NSG-style, reusing
+``core.graph._ensure_connected``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import BuildConfig, GraphConfig
+from repro.core.dataset import pairwise_dist
+from repro.core.graph import (
+    Graph,
+    _ensure_connected,
+    _greedy_search_np,
+    _pad_rows,
+    compensated_build_cfg,
+    robust_prune,
+)
+
+
+@dataclass
+class StitchResult:
+    """The stitched global graph plus the patch accounting the NAND build
+    model bills (every patched row is an adjacency re-program)."""
+    graph: Graph                 # GLOBAL built ids, all segments reachable
+    anchors: np.ndarray          # (A,) global ids used as stitch anchors
+    cross_edges: int             # directed edges between different segments
+    patched_rows: int            # adjacency rows rewritten by stitching
+
+
+def _segment_of(segments) -> np.ndarray:
+    """(N,) global id -> segment index."""
+    n = sum(s.num_vertices for s in segments)
+    out = np.empty(n, np.int32)
+    for i, seg in enumerate(segments):
+        out[seg.start : seg.start + seg.num_vertices] = i
+    return out
+
+
+def _pick_anchors(seg, sample: int, rng: np.random.Generator) -> np.ndarray:
+    """Boundary anchors of one segment, GLOBAL ids: the entry point first
+    (every traversal crosses it), then the hot prefix (the highest-traffic
+    vertices benefit most from long-range edges), then a random spread."""
+    n = seg.num_vertices
+    picks = [seg.graph.entry_point]
+    picks += [i for i in range(seg.hot_count) if i != seg.graph.entry_point]
+    if len(picks) < sample:
+        rest = rng.permutation(n)
+        picks += [int(i) for i in rest if int(i) not in set(picks)]
+    return seg.start + np.asarray(picks[:sample], np.int64)
+
+
+def stitch_segments(
+    segments,
+    metric: str,
+    graph_cfg: GraphConfig,
+    build_cfg: BuildConfig,
+) -> StitchResult:
+    """Stitch built segments (``core.segmented.IndexSegment``) into one
+    global :class:`~repro.core.graph.Graph`."""
+    num_segments = len(segments)
+    n = sum(s.num_vertices for s in segments)
+    r = graph_cfg.max_degree
+    alpha = graph_cfg.alpha
+    base = np.concatenate([s.base for s in segments])
+    seg_of = _segment_of(segments)
+
+    # block-diagonal union: per-segment adjacency offset to global ids
+    adj = np.zeros((n, r), np.int32)
+    deg = np.zeros((n,), np.int32)
+    for seg in segments:
+        lo = seg.start
+        hi = lo + seg.num_vertices
+        adj[lo:hi] = seg.graph.adjacency + lo
+        deg[lo:hi] = seg.graph.degrees
+
+    entry = int(segments[0].start + segments[0].graph.entry_point)
+    list_size = build_cfg.stitch_list_size or compensated_build_cfg(
+        graph_cfg, num_segments, n
+    ).build_list_size
+
+    patched: set = set()
+    anchors_all: list = []
+    rng = np.random.default_rng(graph_cfg.seed)
+    # segments join the union one at a time; segment 0 seeds it.  Greedy
+    # search can only reach the stitched prefix, so anchor candidates are
+    # guaranteed to be cross-segment links into the union.
+    for s in range(1, num_segments):
+        seg = segments[s]
+        anchors = _pick_anchors(seg, build_cfg.stitch_sample, rng)
+        anchors_all.append(anchors)
+        for a in anchors:
+            a = int(a)
+            scored, _ = _greedy_search_np(
+                base, adj, deg, entry, base[a], metric, list_size
+            )
+            cross = [v for v, _ in scored if seg_of[v] != s]
+            if not cross:
+                continue
+            row = [int(v) for v in adj[a, : deg[a]]]
+            merged = np.asarray(
+                list(dict.fromkeys(row + cross)), np.int64
+            )
+            cd = pairwise_dist(base[a : a + 1], base[merged], metric)[0]
+            kept = robust_prune(merged, cd, base, metric, r, alpha)
+            adj[a, : len(kept)] = kept
+            deg[a] = len(kept)
+            patched.add(a)
+            # reverse-patch the union side (DeltaSegment._patch_reverse_edge)
+            for j in kept:
+                if seg_of[j] == s:
+                    continue
+                dj = int(deg[j])
+                row_j = adj[j, :dj]
+                if a in row_j:
+                    continue
+                if dj < r:
+                    adj[j, dj] = a
+                    deg[j] = dj + 1
+                else:
+                    merged_j = np.append(row_j, a).astype(np.int64)
+                    cdj = pairwise_dist(
+                        base[j : j + 1], base[merged_j], metric
+                    )[0]
+                    kept_j = robust_prune(
+                        merged_j, cdj, base, metric, r, alpha
+                    )
+                    adj[j, : len(kept_j)] = kept_j
+                    deg[j] = len(kept_j)
+                patched.add(int(j))
+
+    # finalize: ragged rows -> connectivity repair -> padded adjacency
+    rows = [[int(v) for v in adj[i, : deg[i]]] for i in range(n)]
+    before = {i: list(row) for i, row in enumerate(rows)}
+    rows = _ensure_connected(rows, base, metric, entry, r, alpha)
+    for i, row in enumerate(rows):
+        if row != before[i]:
+            patched.add(i)
+    padded, degrees = _pad_rows(rows, r, n)
+
+    cross_edges = 0
+    for i in range(n):
+        cross_edges += int(
+            (seg_of[padded[i, : degrees[i]]] != seg_of[i]).sum()
+        )
+    return StitchResult(
+        graph=Graph(
+            adjacency=padded, degrees=degrees, entry_point=entry,
+            metric=metric,
+        ),
+        anchors=np.concatenate(anchors_all) if anchors_all
+        else np.empty((0,), np.int64),
+        cross_edges=cross_edges,
+        patched_rows=len(patched),
+    )

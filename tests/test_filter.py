@@ -429,3 +429,17 @@ def test_upgrade_config_fills_missing_fields():
     up = upgrade_config(thawed)
     assert up.filter == FilterConfig()
     assert up.search.k == 7
+
+
+def test_sharded_corpus_upgrades_pre_shard_config(tiny_index):
+    # ProximaIndex.sharded_corpus goes through upgrade_config rather than a
+    # getattr default shim: an index whose config predates ShardConfig (and
+    # BuildConfig) still shards with default policy
+    import dataclasses as dc
+
+    old_cfg = _strip_fields(tiny_index.config, {"shard", "build"})
+    old_index = dc.replace(tiny_index, config=old_cfg)
+    tiled, part = old_index.sharded_corpus(num_tiles=2)
+    assert part.num_tiles == 2
+    ref, _ = tiny_index.sharded_corpus(num_tiles=2)
+    assert np.asarray(tiled.adjacency).shape == np.asarray(ref.adjacency).shape

@@ -1,0 +1,284 @@
+"""Segmented out-of-core build: single-segment bit-identity with the legacy
+monolithic pipeline (the CI equivalence gate), calibrated-beta reordering
+invariance, reservoir/streaming-kNN correctness, cross-segment stitching
+quality, direct-to-tile serving, and per-segment storage/NAND accounting.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    DatasetConfig, GraphConfig, PQConfig, ProximaConfig, SearchConfig,
+)
+from repro.core import pq as pq_mod
+from repro.core.dataset import (
+    ArraySegmentSource, exact_knn, exact_knn_stream, make_dataset,
+    recall_at_k,
+)
+from repro.core.index import build_index, build_index_monolithic
+from repro.core.search import graph_search
+from repro.core.segmented import build_segmented, reservoir_sample
+from repro.nand.simulator import BuildTrace, simulate_build
+
+
+def _cfg(n=220, dim=32, hot=0.05, seed=0):
+    return ProximaConfig(
+        dataset=DatasetConfig(name="sift-like", num_base=n, num_queries=12,
+                              dim=dim, num_clusters=6, cluster_std=0.3,
+                              seed=seed),
+        pq=PQConfig(num_subvectors=8, num_centroids=16, kmeans_iters=4),
+        graph=GraphConfig(max_degree=12, build_list_size=24, alpha=1.2),
+        search=SearchConfig(k=10, list_size=32, t_init=8, t_step=4,
+                            repetition_rate=3, beta=1.06),
+        hot_node_fraction=hot,
+    )
+
+
+# --------------------------------------------------------------------------
+# single-segment equivalence: build_segmented(S=1).to_flat() IS the legacy
+# monolithic build, artifact for artifact.  CI runs this file's
+# "equivalence" selection as the segmented-build gate.
+# --------------------------------------------------------------------------
+
+def test_single_segment_equivalence_monolithic():
+    cfg = _cfg()
+    ds = make_dataset(cfg.dataset)
+    mono = build_index_monolithic(cfg, dataset=ds, reorder_samples=8,
+                                  calibrate=True)
+    seg = build_segmented(cfg, dataset=ds, reorder_samples=8, calibrate=True,
+                          segment_size=0)
+    assert seg.num_segments == 1 and seg.stitch is None
+    flat = seg.to_flat()
+
+    np.testing.assert_array_equal(flat.graph.adjacency, mono.graph.adjacency)
+    np.testing.assert_array_equal(flat.graph.degrees, mono.graph.degrees)
+    assert flat.graph.entry_point == mono.graph.entry_point
+    np.testing.assert_array_equal(flat.codes, mono.codes)
+    np.testing.assert_array_equal(flat.dataset.base, mono.dataset.base)
+    np.testing.assert_array_equal(flat.dataset.gt, mono.dataset.gt)
+    np.testing.assert_array_equal(flat.codebook.centroids,
+                                  mono.codebook.centroids)
+    np.testing.assert_array_equal(flat.reordering.perm, mono.reordering.perm)
+    assert flat.reordering.hot_count == mono.reordering.hot_count
+    assert flat.calibrated_beta == mono.calibrated_beta
+    assert (flat.gap.encoded_bytes if flat.gap else 0) == \
+           (mono.gap.encoded_bytes if mono.gap else 0)
+
+
+def test_build_index_wrapper_equivalence(tiny_proxima_cfg, tiny_index):
+    # build_index is now the thin build_segmented(...).to_flat() wrapper; the
+    # session fixture (built through the wrapper) must match a direct
+    # monolithic build on the shared fixture config.
+    mono = build_index_monolithic(tiny_proxima_cfg, reorder_samples=24)
+    np.testing.assert_array_equal(tiny_index.graph.adjacency,
+                                  mono.graph.adjacency)
+    np.testing.assert_array_equal(tiny_index.codes, mono.codes)
+    np.testing.assert_array_equal(tiny_index.reordering.perm,
+                                  mono.reordering.perm)
+
+
+# --------------------------------------------------------------------------
+# calibrated beta is invariant to visit-frequency reordering (regression:
+# the calibrator used to see reordered codes against UN-reordered encoder
+# input, silently mis-pairing every sampled row)
+# --------------------------------------------------------------------------
+
+def test_calibrated_beta_invariant_to_reordering():
+    # n <= calibrate_beta's num_samples/num_targets, so calibration covers
+    # every (code, vector) pair and the quantile is over the same multiset
+    # regardless of row order -> betas must be EXACTLY equal.
+    cfg_hot = _cfg(hot=0.05)
+    cfg_cold = dataclasses.replace(cfg_hot, hot_node_fraction=0.0)
+    ds = make_dataset(cfg_hot.dataset)
+    hot = build_index(cfg_hot, dataset=ds, reorder_samples=8, calibrate=True)
+    cold = build_index(cfg_cold, dataset=ds, reorder_samples=8,
+                       calibrate=True)
+    assert hot.reordering is not None and cold.reordering is None
+    assert hot.calibrated_beta == cold.calibrated_beta
+
+
+def test_calibrate_beta_permutation_invariant_pairs():
+    # the unit-level property behind the regression above: permuting rows of
+    # (codes, base) TOGETHER leaves beta unchanged when sampling covers n.
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((96, 16)).astype(np.float32)
+    cfg = PQConfig(num_subvectors=4, num_centroids=8, kmeans_iters=4)
+    cb = pq_mod.train_pq(base, cfg, "l2")
+    codes = np.asarray(pq_mod.encode(jnp.asarray(base),
+                                     jnp.asarray(cb.centroids)))
+    perm = np.random.default_rng(1).permutation(96)
+    b0 = pq_mod.calibrate_beta(cb, codes, base,
+                               np.random.default_rng(2), 96, 96)
+    b1 = pq_mod.calibrate_beta(cb, codes[perm], base[perm],
+                               np.random.default_rng(3), 96, 96)
+    assert b0 == b1
+
+
+# --------------------------------------------------------------------------
+# streaming primitives
+# --------------------------------------------------------------------------
+
+def test_reservoir_sample_small_stream_is_identity():
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((100, 8)).astype(np.float32)
+    src = ArraySegmentSource(base, segment_size=30)
+    assert src.num_segments == 4
+    np.testing.assert_array_equal(reservoir_sample(src, 100), base)
+    np.testing.assert_array_equal(reservoir_sample(src, 1000), base)
+
+
+def test_reservoir_sample_uniform_membership():
+    rng = np.random.default_rng(0)
+    base = np.arange(500, dtype=np.float32)[:, None] * np.ones(4, np.float32)
+    src = ArraySegmentSource(base, segment_size=64)
+    sample = reservoir_sample(src, 50, seed=7)
+    assert sample.shape == (50, 4)
+    ids = sample[:, 0].astype(int)
+    assert np.all((ids >= 0) & (ids < 500))
+    assert len(np.unique(ids)) == 50           # no duplicate rows
+    # deterministic for a fixed seed
+    np.testing.assert_array_equal(sample, reservoir_sample(src, 50, seed=7))
+
+
+def test_exact_knn_stream_matches_flat():
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((300, 12)).astype(np.float32)
+    queries = rng.standard_normal((9, 12)).astype(np.float32)
+    src = ArraySegmentSource(base, segment_size=70)
+    for metric in ("l2", "ip"):
+        got = exact_knn_stream(queries, src, 10, metric)
+        want = exact_knn(queries, base, 10, metric)
+        np.testing.assert_array_equal(np.sort(got, 1), np.sort(want, 1))
+
+
+# --------------------------------------------------------------------------
+# multi-segment: stitching quality and direct-to-tile serving
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def seg_cfg():
+    return _cfg(n=1200, dim=32)
+
+
+@pytest.fixture(scope="module")
+def seg_ds(seg_cfg):
+    return make_dataset(seg_cfg.dataset)
+
+
+@pytest.fixture(scope="module")
+def seg4(seg_cfg, seg_ds):
+    return build_segmented(seg_cfg, dataset=seg_ds, reorder_samples=8,
+                           segment_size=300)
+
+
+@pytest.mark.slow
+def test_stitched_graph_connected_and_navigable(seg4, seg_cfg, seg_ds):
+    assert seg4.num_segments == 4
+    assert seg4.stitch.cross_edges > 0
+    assert seg4.stitch.patched_rows > 0
+    flat = seg4.to_flat()
+    adj, deg = flat.graph.adjacency, flat.graph.degrees
+    n = adj.shape[0]
+    # BFS from the entry point must reach every vertex (stitching turned
+    # four disjoint block-diagonal graphs into one navigable graph)
+    seen = np.zeros(n, bool)
+    frontier = [flat.graph.entry_point]
+    seen[flat.graph.entry_point] = True
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in adj[v, : deg[v]]:
+                if not seen[u]:
+                    seen[u] = True
+                    nxt.append(int(u))
+        frontier = nxt
+    assert seen.all()
+    # every segment's row block keeps cross-segment neighbours
+    seg_of = np.repeat(np.arange(4), 300)
+    valid = np.arange(adj.shape[1])[None, :] < deg[:, None]
+    assert ((seg_of[:, None] != seg_of[adj]) & valid).any(axis=1).sum() > 0
+
+
+@pytest.mark.slow
+def test_multi_segment_recall_close_to_flat(seg4, seg_cfg, seg_ds):
+    flat = seg4.to_flat()
+    mono = build_index_monolithic(seg_cfg, dataset=seg_ds, reorder_samples=8)
+    q = jnp.asarray(seg_ds.queries)
+    r_seg = recall_at_k(
+        np.asarray(graph_search(flat.corpus(), q, seg_cfg.search,
+                                seg_ds.metric).ids),
+        flat.dataset.gt, 10)
+    r_mono = recall_at_k(
+        np.asarray(graph_search(mono.corpus(), q, seg_cfg.search,
+                                seg_ds.metric).ids),
+        mono.dataset.gt, 10)
+    # acceptance bar: within 1% of the flat build on the same dataset
+    assert r_seg >= r_mono - 0.01
+
+
+@pytest.mark.slow
+def test_segment_tiles_serve_tiled_plan(seg4, seg_ds):
+    from repro.plan import Searcher, SearchRequest
+    from repro.shard import partition_index
+
+    s = Searcher.open(seg4)
+    res = s.search(SearchRequest(queries=seg_ds.queries))
+    assert res.plan.kind == "tiled"
+    assert res.stats.num_tiles == seg4.num_segments
+    perm = seg4.global_perm()
+    r = recall_at_k(np.asarray(res.ids), perm[seg_ds.gt], 10)
+    assert r >= 0.85
+
+    # partition_index auto-detects a segment-built index and emits the same
+    # tiles as tiled_corpus()
+    tiled_a, part_a = seg4.tiled_corpus()
+    tiled_b, part_b = partition_index(seg4)
+    assert part_b.policy == "segments"
+    np.testing.assert_array_equal(np.asarray(tiled_a.adjacency),
+                                  np.asarray(tiled_b.adjacency))
+    np.testing.assert_array_equal(np.asarray(tiled_a.tile_ids),
+                                  np.asarray(tiled_b.tile_ids))
+    np.testing.assert_array_equal(np.asarray(part_a.tile_sizes),
+                                  np.asarray(part_b.tile_sizes))
+
+
+# --------------------------------------------------------------------------
+# accounting: per-segment storage sums and build-time NAND billing
+# --------------------------------------------------------------------------
+
+def test_single_segment_index_bytes_matches_flat():
+    cfg = _cfg()
+    ds = make_dataset(cfg.dataset)
+    seg = build_segmented(cfg, dataset=ds, reorder_samples=8, segment_size=0)
+    got = seg.index_bytes()
+    want = seg.to_flat().index_bytes()
+    per = got.pop("per_segment")
+    assert len(per) == 1
+    assert got == want
+    for key, total in got.items():
+        assert sum(p[key] for p in per) == total
+
+
+@pytest.mark.slow
+def test_multi_segment_index_bytes_and_build_trace(seg4):
+    acct = seg4.index_bytes()
+    per = acct["per_segment"]
+    assert len(per) == 4
+    for key in ("raw_bytes", "index_bytes_gap", "pq_bytes", "total_bytes",
+                "hot_repetition_bytes"):
+        assert acct[key] == sum(p[key] for p in per)
+    assert acct["hot_repetition_bytes"] > 0      # hot prefixes are per-segment
+
+    sim = simulate_build(seg4.build_trace())
+    assert sim.write_amplification > 1.0         # stitching re-programs rows
+    assert len(sim.per_segment_seconds) == 4
+    assert sim.build_seconds > 0 and sim.program_mb > 0
+
+
+def test_build_trace_billing_without_stitch():
+    sim = simulate_build(BuildTrace(segment_sizes=(500,), stitched_rows=0))
+    assert sim.write_amplification == 1.0
+    assert len(sim.per_segment_seconds) == 1
+    assert sim.erase_energy_uj == 0.0

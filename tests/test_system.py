@@ -66,3 +66,21 @@ def test_storage_accounting(tiny_index):
     assert b["index_bytes_gap"] < b["index_bytes_uncompressed"]
     assert b["pq_bytes"] == idx.codes.nbytes
     assert b["total_bytes"] > 0
+    # hot-node repetition is billed: hot prefix x degree x code bytes
+    # (tiny_index builds with hot_node_fraction > 0)
+    assert idx.hot_count > 0
+    assert b["hot_repetition_bytes"] == \
+        idx.hot_count * idx.graph.max_degree * idx.codes.shape[1]
+    assert b["total_bytes"] == (b["raw_bytes"] + b["index_bytes_gap"]
+                                + b["pq_bytes"] + b["hot_repetition_bytes"])
+
+
+def test_storage_accounting_gap_disabled(tiny_index):
+    # with gap encoding off, the index column falls back to the raw
+    # 4-byte-per-slot adjacency and no compression is claimed
+    idx = dataclasses.replace(tiny_index, gap=None)
+    b = idx.index_bytes()
+    n, r = idx.graph.adjacency.shape
+    assert b["index_bytes_gap"] == b["index_bytes_uncompressed"] == n * r * 4
+    assert b["total_bytes"] == (b["raw_bytes"] + n * r * 4 + b["pq_bytes"]
+                                + b["hot_repetition_bytes"])
