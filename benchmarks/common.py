@@ -75,3 +75,21 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     for _ in range(iters):
         out = fn(*args)
     return out, (time.time() - t0) / iters * 1e6
+
+
+# --------------------------------------------------------------------- recall
+# THE recall@k implementation lives in repro.core.dataset (Paper Eq. (2),
+# -1-padding aware) and is shared with the serving-path shadow-recall
+# estimator (repro.obs.quality); benches import it from here so the bench
+# suite has one entry point and no private reimplementations.
+from repro.core.dataset import recall_at_k  # noqa: E402,F401  (re-export)
+
+
+def served_recall(done, rids, gt, k: int) -> float:
+    """recall@k over a ``ServingEngine``'s completed requests: ``done`` maps
+    rid -> completed Request, ``rids`` aligns requests with ground-truth
+    rows (wrapping modulo len(gt) for multi-pass replays)."""
+    nq = gt.shape[0]
+    pred = np.stack([np.asarray(done[rid].ids) for rid in rids])
+    gtm = np.stack([gt[i % nq] for i in range(len(rids))])
+    return recall_at_k(pred, gtm, k)

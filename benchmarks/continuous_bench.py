@@ -34,7 +34,7 @@ import time
 import numpy as np
 
 from benchmarks.arrivals import arrival_schedule, replay
-from benchmarks.common import get_index
+from benchmarks.common import get_index, served_recall
 from repro.nand.device import NandConfig
 from repro.obs import Observability
 from repro.serve import ServingEngine
@@ -43,15 +43,6 @@ DEFAULT_JSON = "BENCH_continuous.json"
 BATCH = 16
 SLOTS = 16
 FLUSH_US = 20_000.0      # batch flush window under open-loop load
-
-
-def _recall(eng, rids, gt, k: int) -> float:
-    hits = 0
-    nq = gt.shape[0]
-    for i, rid in enumerate(rids):
-        got = set(int(x) for x in eng.done[rid].ids[:k] if x >= 0)
-        hits += len(got & set(int(x) for x in gt[i % nq, :k]))
-    return hits / (len(rids) * k)
 
 
 def _batch_saturation_qps(idx, q: np.ndarray, passes: int = 4) -> float:
@@ -96,7 +87,7 @@ def _serve(idx, q, gt, k, arrivals, *, continuous: bool) -> dict:
         "p99_ms": float(np.percentile(lat, 99)),
         "mean_ms": float(lat.mean()),
         "achieved_qps": len(rids) / wall,
-        "recall_at_k": _recall(eng, rids, gt, k),
+        "recall_at_k": served_recall(eng.done, rids, gt, k),
         "nand_pj_per_query": pj.mean if pj is not None else None,
         "nand_round_latency_us": rnd.mean if rnd is not None else None,
         "nand_overlap_saved_us": sav.mean if sav is not None else None,

@@ -14,9 +14,9 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import DATASETS, get_index, proxima_config
+from benchmarks.common import DATASETS, get_index, proxima_config, recall_at_k
 from repro.configs.base import PQConfig, SearchConfig
-from repro.core import recall_at_k, graph_search as search
+from repro.core import graph_search as search
 from repro.core.ivf import build_ivf, search_ivf
 
 

@@ -26,9 +26,8 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import get_index
+from benchmarks.common import get_index, recall_at_k
 from repro.configs.base import SearchConfig
-from repro.core import recall_at_k
 from repro.core.dataset import exact_knn
 from repro.filter import FilterSpec, attach_attributes, random_attributes
 from repro.nand.simulator import filter_comparison, trace_from_plan_execution

@@ -93,6 +93,31 @@ def main(out=print, smoke: bool = False) -> None:
         f"disabled_us={plan_s * 1e6:.2f};"
         f"obs_share_of_batch={obs_share:.5f}")
 
+    # ---- quality-monitoring tax: the shadow-recall hook per batch ---------
+    # qm.observe is what the engine runs per flushed batch when quality obs
+    # is on; amortized over the batch it must stay < 5% of batch latency.
+    # The hook is sampled (rate 0.25 here, matching the serving bench), so
+    # the measured mean folds the occasional exact-oracle replay in with the
+    # cheap not-sampled ticks — exactly the production mix.
+    obs_q = Observability.on(tracing=False, nand_billing=False, quality=True,
+                             quality_sample_rate=0.25, quality_seed=3)
+    searcher_q = Searcher.open(idx, cfg=cfg, obs=obs_q)
+    r0 = requests[0]
+    plan_q = searcher_q.plan(r0)
+    ex = searcher_q.execute(plan_q, r0.queries)
+    qm = obs_q.quality
+    qm.observe(searcher_q, plan_q, r0.queries, ex.ids)   # warm the oracle
+    q_reps = 20 if smoke else 50
+    t0 = time.time()
+    for _ in range(q_reps):
+        qm.observe(searcher_q, plan_q, r0.queries, ex.ids)
+    quality_s = (time.time() - t0) / q_reps
+    quality_share = quality_s / max(batch_s, 1e-12)
+
+    out(f"planner/quality_tax,{quality_s * 1e6:.2f},"
+        f"quality_share_of_batch={quality_share:.5f};"
+        f"samples={qm.samples}")
+
     # the redesign's acceptance bars — fail the smoke job loudly
     assert misses == 0, f"plan cache missed {misses}x on repeated requests"
     assert hit_rate >= 0.99, f"plan-cache hit rate {hit_rate:.3f} < 0.99"
@@ -101,6 +126,9 @@ def main(out=print, smoke: bool = False) -> None:
     assert obs_share < 0.05, (
         f"enabled observability adds {obs_share:.1%} of batch latency to "
         f"dispatch (bar: < 5%)")
+    assert quality_share < 0.05, (
+        f"shadow-recall monitoring adds {quality_share:.1%} of batch "
+        f"latency per batch (bar: < 5%)")
 
 
 if __name__ == "__main__":

@@ -19,8 +19,18 @@ schedule at RATE qps instead of back-to-back submission (``--burst`` makes
 the schedule bursty) — the same ``benchmarks.arrivals`` generator the
 continuous-batching benchmark uses, so the two latency snapshots compare.
 
+``--quality`` additionally turns on the quality-observability bundle: the
+seeded shadow-recall estimator samples the served traffic against the exact
+oracle, a per-tenant SLO tracker watches the recall floor, and an off-line
+``trace_session`` pass exports the per-round convergence dataset to
+``results/convergence_log.npz``.  The headline comparison — shadow estimate
+vs the TRUE served recall the bench already computes — lands in
+``BENCH_quality.json`` and is asserted to agree within 0.05 (and within the
+estimator's own reported Wilson CI), so a drifting estimator fails the
+smoke job just like a drifting engine.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--json PATH]
-        [--poisson RATE] [--burst]
+        [--poisson RATE] [--burst] [--quality] [--sample-rate R]
 """
 from __future__ import annotations
 
@@ -30,26 +40,25 @@ import os
 
 import numpy as np
 
-from benchmarks.common import get_index
-from repro.obs import Observability
+from benchmarks.common import get_index, served_recall
+from repro.obs import ConvergenceLog, Observability, SLOTarget, trace_session
+from repro.plan import SearchRequest
 from repro.serve import ServingEngine
 
 DEFAULT_JSON = "BENCH_serving.json"
-
-
-def _recall_at_k(done, rids, gt, k: int) -> float:
-    hits = 0
-    for qi, rid in enumerate(rids):
-        got = set(int(i) for i in done[rid].ids[:k] if i >= 0)
-        hits += len(got & set(int(i) for i in gt[qi, :k]))
-    return hits / (len(rids) * k)
+QUALITY_JSON = "BENCH_quality.json"
+CONVERGENCE_NPZ = os.path.join("results", "convergence_log.npz")
 
 
 def main(out=print, smoke: bool = False, json_path: str | None = None,
-         poisson: float | None = None, burst: bool = False) -> None:
+         poisson: float | None = None, burst: bool = False,
+         quality: bool = False, sample_rate: float = 0.25) -> None:
     idx = get_index("sift-like")
-    obs = Observability.on(tracing=True, nand_billing=True)
-    eng = ServingEngine(idx, batch_size=16, flush_us=0.0, obs=obs)
+    obs = Observability.on(tracing=True, nand_billing=True, quality=quality,
+                           quality_sample_rate=sample_rate, quality_seed=17)
+    slo = {None: SLOTarget(recall_floor=0.5, p99_latency_ms=1e9)} \
+        if quality else None
+    eng = ServingEngine(idx, batch_size=16, flush_us=0.0, obs=obs, slo=slo)
     q = idx.dataset.queries
     gt = np.asarray(idx.dataset.gt)
     k = min(10, gt.shape[1])
@@ -71,7 +80,7 @@ def main(out=print, smoke: bool = False, json_path: str | None = None,
             eng.drain()
             if p == 0:
                 rids_first = rids
-    recall = _recall_at_k(eng.done, rids_first, gt, k)
+    recall = served_recall(eng.done, rids_first, gt, k)
 
     m = obs.metrics
     lat = m.merged_histogram("request_latency_ms")
@@ -124,6 +133,85 @@ def main(out=print, smoke: bool = False, json_path: str | None = None,
     assert m.counter_total("unexpected_recompiles") == 0, \
         "serving defeated the pow2-bucket compile cache"
 
+    if quality:
+        _quality_report(out, eng, obs, q, recall, k, sample_rate)
+
+
+def _quality_report(out, eng, obs, q, true_recall: float, k: int,
+                    sample_rate: float) -> None:
+    """Shadow-estimator calibration + convergence-dataset export, asserted:
+    the online estimate must agree with the bench's true served recall both
+    in absolute terms (<= 0.05) and within its own Wilson CI, and the
+    off-line convergence labels must reproduce the whole-batch path's
+    ``SearchStats.rounds`` (the round-step equivalence contract)."""
+    qm = obs.quality
+    ov = qm.overall()
+    err = abs(ov["estimate"] - true_recall)
+
+    # per-round convergence telemetry: trace one query pass off-line (the
+    # monitor paused so the export does not perturb the sampling stream)
+    log = ConvergenceLog(capacity=1 << 15)
+    plan = eng.searcher.plan(SearchRequest(queries=q))
+    sess = eng.searcher.round_session(plan)
+    with qm.paused():
+        _, rounds = trace_session(sess, q, log)
+        ref = eng.searcher.search(SearchRequest(queries=q))
+    os.makedirs(os.path.dirname(CONVERGENCE_NPZ), exist_ok=True)
+    log.save_npz(CONVERGENCE_NPZ)
+    rt = ConvergenceLog.load_npz(CONVERGENCE_NPZ)
+    X, y, _ = rt.dataset()
+
+    payload = {
+        "dataset": "sift-like",
+        "k": k,
+        "sample_rate": sample_rate,
+        "shadow": dict(ov),
+        "true_recall_at_k": true_recall,
+        "abs_error": err,
+        "slo": eng.slo_status(),
+        "slo_violations": int(eng.stats["slo_violations"]),
+        "convergence": {
+            "records": int(log.count),
+            "dropped": int(log.dropped),
+            "labeled_rows": int(len(y)),
+            "mean_rounds": float(np.mean(rounds)),
+            "npz": CONVERGENCE_NPZ,
+        },
+    }
+    with open(QUALITY_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+    out(f"serving/quality,{0.0:.2f},"
+        f"estimate={ov['estimate']:.3f};true={true_recall:.3f};"
+        f"ci=[{ov['ci_low']:.3f},{ov['ci_high']:.3f}];"
+        f"samples={ov['samples']}")
+    out(f"serving/convergence,{0.0:.2f},"
+        f"records={log.count};labeled_rows={len(y)};"
+        f"mean_rounds={float(np.mean(rounds)):.2f}")
+
+    # estimator calibration bars
+    assert ov["samples"] > 0, "quality monitor sampled nothing"
+    assert err <= 0.05, (
+        f"shadow estimate {ov['estimate']:.3f} vs true "
+        f"{true_recall:.3f}: |err|={err:.3f} > 0.05"
+    )
+    eps = 1e-9
+    assert ov["ci_low"] - eps <= true_recall <= ov["ci_high"] + eps, (
+        f"true recall {true_recall:.3f} outside the estimator's CI "
+        f"[{ov['ci_low']:.3f}, {ov['ci_high']:.3f}]"
+    )
+    assert int(eng.stats["slo_violations"]) == 0, \
+        "healthy serving run burned SLO budget"
+    # convergence-dataset integrity: labels == whole-batch round counters,
+    # and the npz round-trips into the exact training matrix
+    assert np.isclose(float(np.mean(rounds)), float(ref.stats.rounds)), (
+        f"trace_session rounds {float(np.mean(rounds)):.3f} != whole-batch "
+        f"SearchStats.rounds {float(ref.stats.rounds):.3f}"
+    )
+    X0, y0, _ = log.dataset()
+    assert len(y) == len(y0) and np.array_equal(y, y0) \
+        and np.array_equal(X, X0), "convergence npz round-trip mismatch"
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -137,7 +225,14 @@ if __name__ == "__main__":
     ap.add_argument("--burst", action="store_true",
                     help="bursty arrival schedule (rate from --poisson, "
                          "default 100 qps)")
+    ap.add_argument("--quality", action="store_true",
+                    help="shadow-recall estimation + SLO tracking + "
+                         f"convergence-dataset export ({QUALITY_JSON})")
+    ap.add_argument("--sample-rate", type=float, default=0.25,
+                    metavar="R", help="shadow-sampling rate for --quality "
+                                      "(default 0.25)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     main(smoke=args.smoke, json_path=args.json, poisson=args.poisson,
-         burst=args.burst)
+         burst=args.burst, quality=args.quality,
+         sample_rate=args.sample_rate)

@@ -28,9 +28,8 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import get_index
+from benchmarks.common import get_index, recall_at_k
 from repro.configs.base import SearchConfig
-from repro.core import recall_at_k
 from repro.core.dataset import exact_knn
 from repro.nand.simulator import (
     simulate,

@@ -8,6 +8,7 @@ plan cache key, and results come back against only attribute-passing nodes.
 
     PYTHONPATH=src python examples/ann_serving.py
 """
+import os
 import time
 
 import numpy as np
@@ -104,7 +105,8 @@ print(f"  latency p50 {lat.quantile(50):.1f}ms p95 {lat.quantile(95):.1f}ms "
 print(f"  NAND model: {pj.mean/1e6:.2f} uJ/query | "
       f"plan cache hits {m.counter_total('plan_cache_hits'):.0f} | "
       f"batch occupancy {m.gauge_value('batch_occupancy'):.0%}")
-m.to_json("serving_metrics.json")
-obs.tracer.export("serving_trace.json")
-print("  wrote serving_metrics.json + serving_trace.json "
+os.makedirs("results", exist_ok=True)
+m.to_json("results/serving_metrics.json")
+obs.tracer.export("results/serving_trace.json")
+print("  wrote results/serving_metrics.json + results/serving_trace.json "
       "(open the trace in chrome://tracing or ui.perfetto.dev)")

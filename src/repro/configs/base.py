@@ -322,6 +322,14 @@ class ObsConfig:
     metrics: bool = False             # counters / gauges / histograms
     tracing: bool = False             # per-request Chrome trace-event spans
     nand_billing: bool = False        # per-batch simulated NAND cost export
+    # quality layer (repro.obs.quality / repro.obs.convergence)
+    quality: bool = False             # shadow-recall sampling vs the exact
+                                      # oracle, Wilson CIs (implies metrics)
+    quality_sample_rate: float = 0.05  # fraction of live requests replayed
+    quality_seed: int = 0             # sampling-stream seed (deterministic)
+    convergence: bool = False         # per-round telemetry ring buffer
+    convergence_capacity: int = 1 << 16  # ring size in records (oldest
+                                         # dropped on overflow)
 
 
 @dataclass(frozen=True)

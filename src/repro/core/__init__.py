@@ -2,7 +2,8 @@
 data-layout optimizations) as composable JAX modules."""
 from repro.core.dataset import (
     ArraySegmentSource, Dataset, SyntheticSegmentSource, exact_knn,
-    exact_knn_stream, make_dataset, recall_at_k,
+    exact_knn_stream, make_dataset, recall_at_k, recall_hits,
+    recall_hits_per_query,
 )
 from repro.core.index import ProximaIndex, build_index, build_index_monolithic
 from repro.core.segmented import (
@@ -20,6 +21,8 @@ __all__ = [
     "exact_knn",
     "make_dataset",
     "recall_at_k",
+    "recall_hits",
+    "recall_hits_per_query",
     "ProximaIndex",
     "build_index",
     "build_index_monolithic",

@@ -236,9 +236,22 @@ def make_dataset(cfg: DatasetConfig, k_gt: int = 100) -> Dataset:
     return Dataset(base=base, queries=queries, gt=gt, metric=metric, config=cfg)
 
 
+def recall_hits_per_query(pred: np.ndarray, gt: np.ndarray) -> np.ndarray:
+    """(Q,) per-row |pred∩gt| — the primitive :func:`recall_at_k` and the
+    shadow-recall estimator (``obs.quality.QualityMonitor``) both build on.
+    Negative ids (the -1 padding short result lists carry) never match."""
+    out = np.zeros(pred.shape[0], np.int64)
+    for i, (p, g) in enumerate(zip(pred, gt)):
+        out[i] = len(set(int(x) for x in p if x >= 0)
+                     & set(int(x) for x in g if x >= 0))
+    return out
+
+
+def recall_hits(pred: np.ndarray, gt: np.ndarray) -> int:
+    """Row-wise |pred∩gt| summed over queries."""
+    return int(recall_hits_per_query(pred, gt).sum())
+
+
 def recall_at_k(pred: np.ndarray, gt: np.ndarray, k: int) -> float:
     """Paper Eq. (2): |pred∩gt|/k averaged over queries."""
-    hits = 0
-    for p, g in zip(pred[:, :k], gt[:, :k]):
-        hits += len(set(int(i) for i in p if i >= 0) & set(int(i) for i in g))
-    return hits / (pred.shape[0] * k)
+    return recall_hits(pred[:, :k], gt[:, :k]) / (pred.shape[0] * k)

@@ -17,10 +17,16 @@ from __future__ import annotations
 
 import dataclasses
 
+from typing import Optional
+
+from repro.obs.convergence import ConvergenceLog, trace_session
 from repro.obs.kernelwatch import (
     KernelWatch, RecompileWarning, default_kernel_sources,
 )
 from repro.obs.nand_bridge import record_plan_execution
+from repro.obs.quality import (
+    QualityMonitor, SLOTarget, SLOTracker, wilson_interval,
+)
 from repro.obs.registry import Histogram, MetricsRegistry, NULL_REGISTRY
 from repro.obs.tracing import NULL_SPAN, NULL_TRACER, Span, Tracer
 
@@ -28,12 +34,16 @@ from repro.obs.tracing import NULL_SPAN, NULL_TRACER, Span, Tracer
 @dataclasses.dataclass
 class Observability:
     """The bundle every instrumented layer takes: one registry + one tracer
-    (+ the per-batch NAND billing switch).  Use :meth:`on` / :meth:`off`,
-    or :meth:`resolve` to accept user input (None, a bundle, or a
+    (+ the per-batch NAND billing switch, + the optional quality layer: a
+    shadow-recall :class:`QualityMonitor` and a per-round
+    :class:`ConvergenceLog`).  Use :meth:`on` / :meth:`off`, or
+    :meth:`resolve` to accept user input (None, a bundle, or a
     ``configs.base.ObsConfig``)."""
     metrics: MetricsRegistry
     tracer: Tracer
     nand_billing: bool = False
+    quality: Optional[QualityMonitor] = None
+    convergence: Optional[ConvergenceLog] = None
 
     @property
     def enabled(self) -> bool:
@@ -41,10 +51,18 @@ class Observability:
 
     @classmethod
     def on(cls, tracing: bool = True, nand_billing: bool = True,
-           ) -> "Observability":
-        return cls(metrics=MetricsRegistry(enabled=True),
+           quality: bool = False, quality_sample_rate: float = 0.05,
+           quality_seed: int = 0, convergence: bool = False,
+           convergence_capacity: int = 1 << 16) -> "Observability":
+        m = MetricsRegistry(enabled=True)
+        return cls(metrics=m,
                    tracer=Tracer(enabled=tracing),
-                   nand_billing=nand_billing)
+                   nand_billing=nand_billing,
+                   quality=QualityMonitor(
+                       m, sample_rate=quality_sample_rate,
+                       seed=quality_seed) if quality else None,
+                   convergence=ConvergenceLog(convergence_capacity)
+                   if convergence else None)
 
     @classmethod
     def off(cls) -> "Observability":
@@ -58,13 +76,28 @@ class Observability:
             return NULL_OBS
         if isinstance(obj, cls):
             return obj
-        # configs.base.ObsConfig (duck-typed: no config import dependency)
+        # configs.base.ObsConfig (duck-typed: no config import dependency;
+        # getattr defaults keep pre-quality pickled configs resolving)
         if hasattr(obj, "metrics") and isinstance(obj.metrics, bool):
-            if not (obj.metrics or obj.tracing):
+            want_quality = bool(getattr(obj, "quality", False))
+            want_conv = bool(getattr(obj, "convergence", False))
+            if not (obj.metrics or obj.tracing or want_quality or want_conv):
                 return NULL_OBS
-            return cls(metrics=MetricsRegistry(enabled=obj.metrics),
+            # the quality monitor publishes into the registry, so enabling
+            # it implies a live registry even when metrics was left False
+            m = MetricsRegistry(enabled=obj.metrics or want_quality)
+            return cls(metrics=m,
                        tracer=Tracer(enabled=obj.tracing),
-                       nand_billing=obj.nand_billing)
+                       nand_billing=obj.nand_billing,
+                       quality=QualityMonitor(
+                           m,
+                           sample_rate=getattr(obj, "quality_sample_rate",
+                                               0.05),
+                           seed=getattr(obj, "quality_seed", 0))
+                       if want_quality else None,
+                       convergence=ConvergenceLog(
+                           getattr(obj, "convergence_capacity", 1 << 16))
+                       if want_conv else None)
         raise TypeError(
             f"obs= takes an Observability, an ObsConfig or None, "
             f"got {type(obj).__name__}"
@@ -86,6 +119,7 @@ NULL_OBS = Observability(metrics=NULL_REGISTRY, tracer=NULL_TRACER,
                          nand_billing=False)
 
 __all__ = [
+    "ConvergenceLog",
     "Histogram",
     "KernelWatch",
     "MetricsRegistry",
@@ -94,9 +128,14 @@ __all__ = [
     "NULL_SPAN",
     "NULL_TRACER",
     "Observability",
+    "QualityMonitor",
     "RecompileWarning",
+    "SLOTarget",
+    "SLOTracker",
     "Span",
     "Tracer",
     "default_kernel_sources",
     "record_plan_execution",
+    "trace_session",
+    "wilson_interval",
 ]

@@ -109,6 +109,14 @@ class RoundSession:
         return finalize_search(self.corpus, state, self.cfg, self.metric,
                                self._mask)
 
+    def record_round(self, log, qids, state, select=None) -> None:
+        """Append one per-round telemetry record per (selected) lane to an
+        ``obs.convergence.ConvergenceLog`` — the engine's tick path and the
+        off-line dataset driver (``obs.convergence.trace_session``) share
+        this so the feature extraction has one owner (the session knows the
+        effective k)."""
+        log.record_lanes(qids, state, int(self.cfg.k), select=select)
+
     # -------------------------------------------------------------- retire
     def complete(self, queries, core_res):
         """Post-process a finalized lane batch into the plan-layer

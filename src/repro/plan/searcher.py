@@ -24,6 +24,8 @@ import dataclasses
 import warnings
 from typing import Any, Optional
 
+import numpy as np
+
 from repro.configs.base import (
     FilterConfig, PlanConfig, SearchConfig,
 )
@@ -320,9 +322,77 @@ class Searcher:
         """Plan + execute one request.  The only supported entry point."""
         plan = self.planner.plan(request)
         ex = self.planner.execute(plan, request.queries)
-        return SearchResult(ids=ex.ids, dists=ex.dists,
-                            stats=self.planner.stats_for(plan, ex),
-                            plan=plan, raw=ex.raw)
+        res = SearchResult(ids=ex.ids, dists=ex.dists,
+                           stats=self.planner.stats_for(plan, ex),
+                           plan=plan, raw=ex.raw)
+        qm = self.obs.quality
+        if qm is not None:
+            # shadow-recall sampling (off-path exact-oracle replay); the
+            # engine's flush/retire paths feed the monitor themselves since
+            # they execute plans directly
+            qm.observe(self, plan, request.queries, res.ids)
+        return res
+
+    def round_session(self, plan: QueryPlan):
+        """Steppable session for a plan (``None`` when the plan has no
+        round-steppable spine) — planner pass-through, the continuous
+        engine's and the convergence-telemetry driver's entry point."""
+        return self.planner.round_session(plan)
+
+    # ------------------------------------------------------- quality oracle
+    def shadow_ground_truth(self, plan: QueryPlan, queries):
+        """Exact-oracle neighbor ids for a query batch under ``plan``, in the
+        plan's own result-id space — the shadow-recall estimator's ground
+        truth (``obs.quality.QualityMonitor``).
+
+        The oracle population is exactly what the plan searched: for merged
+        plans the LIVE external corpus (``MutableIndex.live_vectors`` —
+        tombstoned vectors excluded, delta inserts included; filtered via the
+        live ``ext_mask``), for masked/scan plans the attribute-passing
+        subset of the base, otherwise the full base.  Returns ``(Q, k')``
+        int64 with ``k' = min(plan.cfg.k, population)`` (``k' = 0`` when
+        nothing passes), or ``None`` where no oracle is resolvable —
+        distributed fan-outs, legacy caller-mask plans (the one-shot mask is
+        not durable), and raw tiled corpora with no backing dataset."""
+        from repro.core.dataset import exact_knn
+
+        if plan.kind == "distributed" or plan.mask_token:
+            return None
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        k = int(plan.cfg.k)
+        if plan.kind == "merged":
+            mut = self.planner.mutable
+            ext_ids, vecs = mut.live_vectors()
+            if plan.spec is not None:
+                _, ext_mask = mut.filter_masks(plan.spec)
+                keep = np.asarray(ext_mask, bool)[ext_ids]
+                ext_ids, vecs = ext_ids[keep], vecs[keep]
+            if ext_ids.size == 0:
+                return np.empty((q.shape[0], 0), np.int64)
+            nn = exact_knn(q, vecs, k, mut.metric)   # caps k at |population|
+            return ext_ids[nn].astype(np.int64)
+        base = self._oracle_base()
+        if base is None:
+            return None
+        if plan.spec is not None:
+            mask = np.asarray(self.planner._mask_for(plan.spec), bool)
+            pids = np.nonzero(mask)[0]
+            if pids.size == 0:
+                return np.empty((q.shape[0], 0), np.int64)
+            nn = exact_knn(q, base[pids], k, self.metric)
+            return pids[nn].astype(np.int64)
+        return exact_knn(q, base, k, self.metric).astype(np.int64)
+
+    def _oracle_base(self):
+        """Base vectors in the target's internal (reordered) id space, or
+        ``None`` when the opened target carries no raw vectors."""
+        idx = self._index
+        ds = getattr(idx, "dataset", None) if idx is not None else None
+        if ds is not None:
+            return np.asarray(ds.base, np.float32)
+        if self.planner.corpus is not None:
+            return np.asarray(self.planner.corpus.base, np.float32)
+        return None
 
     # ------------------------------------------------------------ inspection
     @property

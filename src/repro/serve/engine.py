@@ -66,6 +66,7 @@ the fresh base.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -78,7 +79,9 @@ from repro.configs.base import PlanConfig, SearchConfig
 from repro.core.index import ProximaIndex
 from repro.core.search import next_pow2
 from repro.filter.spec import FilterSpec
-from repro.obs import KernelWatch, Observability, record_plan_execution
+from repro.obs import (
+    KernelWatch, Observability, SLOTracker, record_plan_execution,
+)
 from repro.plan import QueryPlan, Searcher, SearchRequest
 from repro.stream.mutable import MutableIndex
 
@@ -95,6 +98,9 @@ class Request:
     # spec is part of its cache key) are batched together so one compiled
     # execution serves the whole batch; None = unfiltered
     filter: Optional[FilterSpec] = None
+    # namespace slot: part of the plan cache key (tenants never co-batch)
+    # and the SLO tracker's accounting key
+    tenant: Optional[str] = None
     # the compiled strategy serving this request (assigned at submit)
     plan: Optional[QueryPlan] = None
 
@@ -120,6 +126,9 @@ class EngineStats:
     retired: int = 0                 # continuous mode: lanes retired
     fallback_batches: int = 0        # continuous mode: non-steppable plans
                                      # served through the batch-flush path
+    slo_violations: int = 0          # rolling-window SLO breaches observed
+                                     # (per-tenant detail in the registry's
+                                     # slo_violations{tenant,slo} counters)
     # plan_cache_hits / plan_cache_misses intentionally live on the PLANNER
     # (the component that owns the cache); ``ServingEngine.stats`` merges
     # them into the dict view at read time instead of hand-syncing fields
@@ -217,7 +226,14 @@ class ServingEngine:
         slots: Optional[int] = None,
         nand=None,
         nand_queues: Optional[int] = None,
+        slo=None,
     ):
+        """``slo`` takes a ``{tenant: obs.SLOTarget}`` mapping (key ``None``
+        covers untenanted traffic); completed requests then feed per-tenant
+        rolling latency windows — and, with ``obs`` quality monitoring on,
+        shadow-recall windows — whose breaches count into
+        ``EngineStats.slo_violations`` and the registry's
+        ``slo_violations{tenant,slo}`` counters."""
         pcfg = plan or PlanConfig()
         legacy = dict(search=cfg, num_tiles=num_tiles,
                       shard_policy=shard_policy, probe_tiles=probe_tiles,
@@ -245,12 +261,20 @@ class ServingEngine:
         self._sessions: Dict[tuple, object] = {}   # key -> RoundSession|None
         self._plan_memo: Dict[int, tuple] = {}     # id(plan) -> (plan,
                                                    #   session, cache_key)
+        self._slo = SLOTracker(self.obs.metrics, slo) if slo else None
+        if self.obs.quality is not None and self._slo is not None:
+            # shadow-recall samples are the only recall observations the SLO
+            # windows can get — wire the monitor to feed them
+            self.obs.quality.slo = self._slo
         if self.obs.enabled:
             self.obs.install_kernel_hooks()
         # warm the compile for the full-batch bucket (smaller power-of-two
-        # buckets compile lazily on first use)
+        # buckets compile lazily on first use); warm-up queries are synthetic
+        # — keep them out of the shadow-recall sampling stream
         dummy = np.zeros((batch_size, self.index.dataset.dim), np.float32)
-        self.searcher.search(SearchRequest(queries=dummy))
+        qm = self.obs.quality
+        with (qm.paused() if qm is not None else contextlib.nullcontext()):
+            self.searcher.search(SearchRequest(queries=dummy))
         if self.continuous:
             # warm the round-step kernels at the slot-pool shape for the
             # default (unfiltered) plan, so serving-time ticks start hot
@@ -327,13 +351,19 @@ class ServingEngine:
         d.update(self.searcher.plan_cache_stats())
         return d
 
+    def slo_status(self) -> dict:
+        """Per-tenant rolling-window SLO state (empty without ``slo=``)."""
+        return self._slo.status() if self._slo is not None else {}
+
     # --------------------------------------------------------------- requests
     def submit(self, query: np.ndarray, filter: Optional[FilterSpec] = None,
-               ) -> int:
+               tenant: Optional[str] = None) -> int:
         """Queue one query; ``filter`` (a hashable ``FilterSpec``) restricts
         results to attribute-passing nodes. The request's ``QueryPlan`` is
         compiled here (plan-cache hit for every repeated spec) and requests
-        batch by its cache key."""
+        batch by its cache key — ``tenant`` is part of that key, so tenants
+        never co-batch and their latency/recall account separately (SLO
+        tracking, quality labels)."""
         rid = self._next
         self._next += 1
         if filter is not None and getattr(filter, "is_all", False):
@@ -343,14 +373,15 @@ class ServingEngine:
         with obs.tracer.span("plan-lookup", rid=rid):
             try:
                 plan = self.searcher.plan(SearchRequest(queries=q,
-                                                        filter=filter))
+                                                        filter=filter,
+                                                        tenant=tenant))
             except RuntimeError:
                 # missing attribute store: accept the request and surface the
                 # error at flush time, like the legacy engine did
                 plan = None
         self.queue.append(Request(rid=rid, query=q,
                                   t_submit=time.perf_counter(),
-                                  filter=filter, plan=plan))
+                                  filter=filter, tenant=tenant, plan=plan))
         if obs.enabled:
             # queue residency is an async span: many requests overlap, so a
             # synchronous nested span on one track cannot represent it
@@ -435,13 +466,15 @@ class ServingEngine:
         plan = head.plan
         if plan is None:             # deferred planning error (e.g. filter
             plan = self.searcher.plan(  # without a store) raises HERE
-                SearchRequest(queries=head.query, filter=head.filter))
+                SearchRequest(queries=head.query, filter=head.filter,
+                              tenant=head.tenant))
             # planning succeeded after all — cache the plan back onto the
             # head and every queued same-filter request, so they batch under
             # the real cache key and are never re-planned on later flushes
             head.plan = plan
             for r in self.queue:
-                if r.plan is None and r.filter == head.filter:
+                if r.plan is None and r.filter == head.filter \
+                        and r.tenant == head.tenant:
                     r.plan = plan
 
         def _key(r: Request):
@@ -495,6 +528,14 @@ class ServingEngine:
                             kind=plan.kind, strategy=plan.strategy,
                             tenant=plan.tenant,
                         )
+                    if self._slo is not None:
+                        self._slo.record_latency(plan.tenant, r.latency_ms)
+                if obs.quality is not None:
+                    # off-path shadow-recall sampling over the batch's
+                    # UNPADDED rows (also feeds the SLO recall windows)
+                    obs.quality.observe(self.searcher, plan, q[:n], ids[:n])
+                if self._slo is not None:
+                    self._stats.slo_violations = self._slo.total_violations
             if obs.enabled:
                 bsp.set(queries=n, bucket=bucket)
                 obs.metrics.gauge("batch_occupancy", n / bucket)
@@ -648,6 +689,15 @@ class ServingEngine:
         obs = self.obs
         plan = pool.session.plan
         pool.state = pool.session.step(pool.state)
+        if obs.convergence is not None:
+            # per-round telemetry for every occupied lane — live requests
+            # grow the same learned-ET dataset the off-line driver collects
+            occ = [i for i, r in enumerate(pool.requests) if r is not None]
+            if occ:
+                pool.session.record_round(
+                    obs.convergence,
+                    [pool.requests[i].rid for i in occ],
+                    pool.state, select=occ)
         active = pool.session.active(pool.state)
         rows = [i for i, r in enumerate(pool.requests)
                 if r is not None and not active[i]]
@@ -679,6 +729,14 @@ class ServingEngine:
                 )
                 obs.metrics.observe("rounds_in_flight", float(rounds[j]),
                                     kind=plan.kind, strategy=plan.strategy)
+            if self._slo is not None:
+                self._slo.record_latency(plan.tenant, r.latency_ms)
+            if obs.convergence is not None:
+                obs.convergence.finalize_lane(r.rid, int(rounds[j]))
+        if obs.quality is not None:
+            obs.quality.observe(self.searcher, plan, qrows, pres.ids)
+        if self._slo is not None:
+            self._stats.slo_violations = self._slo.total_violations
         if plan.spec is not None:
             self._stats.filtered_queries += len(rows)
         self._stats.retired += len(rows)

@@ -1,0 +1,293 @@
+"""Quality observability: shadow-recall estimator (seeded sampling, exact
+oracle fidelity, tombstone/filter awareness), per-tenant SLO window
+semantics, and the per-round convergence log (ring, labels, round-trip)."""
+import numpy as np
+import pytest
+
+from repro.core.dataset import exact_knn, recall_at_k, recall_hits_per_query
+from repro.obs import (
+    ConvergenceLog, MetricsRegistry, Observability, QualityMonitor,
+    SLOTarget, SLOTracker, trace_session, wilson_interval,
+)
+from repro.plan import Searcher, SearchRequest
+
+
+# ---------------------------------------------------------------------------
+# Wilson interval + seeded sampling
+# ---------------------------------------------------------------------------
+
+def test_wilson_interval_basics():
+    assert wilson_interval(0, 0) == (0.0, 1.0)          # vacuous
+    lo, hi = wilson_interval(80, 100)
+    assert lo < 0.8 < hi
+    lo2, hi2 = wilson_interval(800, 1000)
+    assert hi2 - lo2 < hi - lo                          # narrows with trials
+    lo, hi = wilson_interval(0, 50)                     # extremes stay in
+    assert lo == 0.0 and 0.0 < hi < 0.2                 # [0, 1]
+    lo, hi = wilson_interval(50, 50)
+    assert 0.8 < lo < 1.0 and hi == 1.0
+
+
+def test_sampling_deterministic_across_batch_boundaries():
+    """The stream position depends only on requests observed, so one draw of
+    100 equals any split into smaller batches — replays sample identically
+    however the scheduler packed them."""
+    whole = QualityMonitor(MetricsRegistry(), sample_rate=0.3, seed=7)
+    split = QualityMonitor(MetricsRegistry(), sample_rate=0.3, seed=7)
+    a = whole.sample_mask(100)
+    b = np.concatenate([split.sample_mask(n) for n in (13, 1, 40, 46)])
+    assert np.array_equal(a, b)
+    other = QualityMonitor(MetricsRegistry(), sample_rate=0.3, seed=8)
+    assert not np.array_equal(a, other.sample_mask(100))
+
+
+def test_sampling_rate_edges_and_paused():
+    qm0 = QualityMonitor(MetricsRegistry(), sample_rate=0.0, seed=0)
+    assert not qm0.sample_mask(64).any()
+    qm1 = QualityMonitor(MetricsRegistry(), sample_rate=1.0, seed=0)
+    assert qm1.sample_mask(64).all()
+    assert qm1.sample_mask(0).shape == (0,)
+    # paused() suspends observe() without advancing the stream
+    qm = QualityMonitor(MetricsRegistry(), sample_rate=0.5, seed=3)
+    with qm.paused():
+        assert qm.observe(None, None, np.zeros((4, 2)), None) is None
+    assert qm._seq == 0
+
+
+# ---------------------------------------------------------------------------
+# Shadow-recall estimation against the exact oracle
+# ---------------------------------------------------------------------------
+
+def test_shadow_estimate_exact_at_full_sampling(tiny_index):
+    """At sample_rate=1.0 the shadow estimate IS recall against the exact
+    oracle — no sampling noise, so it must equal the independently computed
+    value bit-for-bit."""
+    obs = Observability.on(tracing=False, quality=True,
+                           quality_sample_rate=1.0)
+    s = Searcher.open(tiny_index, obs=obs)
+    q = tiny_index.dataset.queries
+    res = s.search(SearchRequest(queries=q))
+    qm = obs.quality
+    assert qm.samples == q.shape[0]
+    gt = exact_knn(q, np.asarray(tiny_index.dataset.base, np.float32),
+                   s.cfg.k, s.metric)
+    want = recall_at_k(res.ids, gt, s.cfg.k)
+    assert qm.overall()["estimate"] == pytest.approx(want)
+    lo, hi = qm.overall()["ci_low"], qm.overall()["ci_high"]
+    assert lo <= want <= hi
+    cell = qm.estimate("flat", "none")
+    assert cell["estimate"] == pytest.approx(want)
+    m = obs.metrics
+    assert m.counter_total("shadow_samples") == q.shape[0]
+    assert m.gauge_value("recall_estimate", kind="flat", strategy="none",
+                         ) == pytest.approx(want)
+
+
+def test_shadow_oracle_filter_aware(tiny_index):
+    """Masked plans replay against the attribute-passing subset only — every
+    oracle id passes the filter, and ids outside the subset never appear."""
+    from repro.filter import FilterSpec, attach_attributes, random_attributes
+
+    try:
+        store = attach_attributes(
+            tiny_index, random_attributes(tiny_index.dataset.num_base,
+                                          {"category": 4}, seed=5))
+        obs = Observability.on(tracing=False, quality=True,
+                               quality_sample_rate=1.0)
+        s = Searcher.open(tiny_index, obs=obs)
+        spec = FilterSpec.eq("category", 1)
+        req = SearchRequest(queries=tiny_index.dataset.queries, filter=spec)
+        plan = s.plan(req)
+        gt = s.shadow_ground_truth(plan, req.queries)
+        mask = np.asarray(store.mask(spec), bool)
+        assert mask[gt].all(), "oracle returned ids that fail the filter"
+        # and the full pipeline scores against that oracle without error
+        s.search(req)
+        assert obs.quality.samples == req.queries.shape[0]
+        assert obs.metrics.counter_total("shadow_errors") == 0
+    finally:
+        tiny_index.attributes = None   # keep the shared fixture pristine
+
+
+def test_shadow_oracle_tombstone_aware(tiny_index):
+    """Merged plans replay against the LIVE corpus: tombstoned ids never
+    appear in the oracle, and the estimate equals the independent truth
+    computed from live_vectors directly."""
+    from repro.stream import MutableIndex
+
+    mut = MutableIndex(tiny_index)
+    rng = np.random.default_rng(0)
+    dead = rng.choice(tiny_index.dataset.num_base, size=50, replace=False)
+    for ext in dead:
+        mut.delete(int(ext))
+    obs = Observability.on(tracing=False, quality=True,
+                           quality_sample_rate=1.0)
+    s = Searcher.open(mut, obs=obs)
+    q = tiny_index.dataset.queries
+    res = s.search(SearchRequest(queries=q))
+    plan = res.plan
+    assert plan.kind == "merged"
+    gt = s.shadow_ground_truth(plan, q)
+    assert not np.isin(gt, dead).any(), "tombstoned id in the oracle"
+    ext_ids, vecs = mut.live_vectors()
+    want_gt = ext_ids[exact_knn(q, vecs, plan.cfg.k, mut.metric)]
+    hits = recall_hits_per_query(res.ids[:, :plan.cfg.k],
+                                 want_gt[:, :plan.cfg.k])
+    want = float(hits.sum()) / (q.shape[0] * plan.cfg.k)
+    assert obs.quality.overall()["estimate"] == pytest.approx(want)
+
+
+def test_shadow_errors_counted_not_raised(tiny_index):
+    """The nand_bridge contract: a broken oracle must not take down the
+    serving path — failures are counted as shadow_errors."""
+    obs = Observability.on(tracing=False, quality=True,
+                           quality_sample_rate=1.0)
+    s = Searcher.open(tiny_index, obs=obs)
+    q = tiny_index.dataset.queries[:4]
+    plan = s.plan(SearchRequest(queries=q))
+
+    class Broken:
+        def shadow_ground_truth(self, plan, queries):
+            raise RuntimeError("oracle down")
+
+    out = obs.quality.observe(Broken(), plan, q, np.zeros((4, 10), np.int64))
+    assert out is None
+    assert obs.metrics.counter_total("shadow_errors") == 4
+
+
+# ---------------------------------------------------------------------------
+# SLO window semantics
+# ---------------------------------------------------------------------------
+
+def test_slo_empty_and_shallow_windows_never_violate():
+    m = MetricsRegistry()
+    t = SLOTracker(m, {None: SLOTarget(recall_floor=0.9,
+                                       p99_latency_ms=10.0)},
+                   min_samples=8)
+    assert t.total_violations == 0
+    for _ in range(7):                  # below min_samples: no evaluation,
+        t.record_latency(None, 1e6)     # even with outrageous values
+        t.record_recall(None, 0.0)
+    assert t.total_violations == 0
+    st = t.status()[None]
+    assert st["latency_samples"] == 7 and st["recall_samples"] == 7
+
+
+def test_slo_boundary_values_pass():
+    """A window statistic exactly AT the target is on budget, not over."""
+    m = MetricsRegistry()
+    t = SLOTracker(m, {None: SLOTarget(recall_floor=0.5,
+                                       p99_latency_ms=10.0)},
+                   min_samples=8)
+    for _ in range(16):
+        t.record_latency(None, 10.0)    # window p99 == ceiling exactly
+        t.record_recall(None, 0.5)      # window mean == floor exactly
+    assert t.total_violations == 0
+    assert m.counter_total("slo_violations") == 0
+
+
+def test_slo_breach_increments_and_labels():
+    m = MetricsRegistry()
+    t = SLOTracker(m, {"acme": SLOTarget(recall_floor=0.9),
+                       None: SLOTarget(p99_latency_ms=5.0)},
+                   min_samples=4)
+    for _ in range(4):
+        t.record_recall("acme", 0.2)    # evaluates at depth 4: breach
+    assert t.total_violations == 1
+    assert m.counter_total("slo_violations") == 1
+    assert m.gauge_value("slo_burn_rate", tenant="acme",
+                         slo="recall_floor") == pytest.approx(7.0)
+    for _ in range(4):
+        t.record_latency(None, 50.0)    # p99 50 > 5: breach on record 4
+    assert t.total_violations == 2
+    # untracked tenants are ignored entirely
+    t.record_latency("ghost", 1e9)
+    t.record_recall("ghost", 0.0)
+    assert t.total_violations == 2
+
+
+def test_slo_window_rolls_off_old_breaches():
+    m = MetricsRegistry()
+    t = SLOTracker(m, {None: SLOTarget(recall_floor=0.5)},
+                   window=8, min_samples=4)
+    for _ in range(8):
+        t.record_recall(None, 0.0)      # deep breach
+    burned = t.total_violations
+    assert burned > 0
+    for _ in range(8):                  # healthy traffic displaces the
+        t.record_recall(None, 1.0)      # breach from the rolling window
+    assert t.status()[None]["window_recall"] == pytest.approx(1.0)
+    for _ in range(4):
+        t.record_recall(None, 1.0)
+    # recovery breached only while the mixed window still averaged under
+    # the floor (means 1/8, 2/8, 3/8; 4/8 is the passing boundary)
+    assert t.total_violations == burned + 3
+
+
+# ---------------------------------------------------------------------------
+# Convergence log
+# ---------------------------------------------------------------------------
+
+def test_convergence_trace_roundtrip(tiny_index, tmp_path):
+    """trace_session per-lane rounds == whole-batch SearchStats.rounds (the
+    round-step equivalence contract), and the npz round-trips into the
+    identical training matrix."""
+    s = Searcher.open(tiny_index)
+    q = tiny_index.dataset.queries
+    plan = s.plan(SearchRequest(queries=q))
+    sess = s.round_session(plan)
+    log = ConvergenceLog(capacity=1 << 14)
+    _, rounds = trace_session(sess, q, log)
+    ref = s.search(SearchRequest(queries=q))
+    assert float(np.mean(rounds)) == pytest.approx(float(ref.stats.rounds))
+    assert log.dropped == 0 and log.count > 0
+    assert set(log.labels.values()) == set(int(r) for r in rounds)
+
+    X, y, names = log.dataset()
+    assert X.shape == (log.count, len(names)) and len(y) == log.count
+    # the label is the lane's TOTAL rounds, so every record's round column
+    # is bounded by its label
+    rcol = X[:, list(names).index("round")]
+    assert (rcol <= y).all() and (y > 0).all()
+
+    path = str(tmp_path / "conv.npz")
+    log.save_npz(path)
+    rt = ConvergenceLog.load_npz(path)
+    X2, y2, _ = rt.dataset()
+    assert np.array_equal(X, X2) and np.array_equal(y, y2)
+
+    jl = tmp_path / "conv.jsonl"
+    log.export_jsonl(str(jl))
+    import json
+
+    lines = [json.loads(ln) for ln in jl.read_text().splitlines()]
+    assert sum(ln["type"] == "round" for ln in lines) == log.count
+    assert sum(ln["type"] == "label" for ln in lines) == len(log.labels)
+
+
+def test_convergence_ring_overflow_drops_oldest():
+    class Lanes:
+        pass
+
+    def state_for(qid):
+        st = Lanes()
+        st.dists = np.array([[1.0, 2.0]])
+        st.ids = np.array([[qid, qid + 1]])
+        st.stable = np.array([1])
+        st.t = np.array([2])
+        st.rounds = np.array([3])
+        st.done = np.array([False])
+        st.evaluated = np.array([[True, False]])
+        return st
+
+    log = ConvergenceLog(capacity=4)
+    for i in range(10):
+        log.record_lanes([i], state_for(i), k=2)
+    assert log.count == 4 and log.dropped == 6
+    recs = log.to_arrays()
+    assert recs["qid"].tolist() == [6, 7, 8, 9]    # oldest dropped
+    log.finalize_lanes(range(10), [5] * 10)
+    X, y, _ = log.dataset()
+    assert len(y) == 4                             # labels outlive records
+    with pytest.raises(ValueError):
+        ConvergenceLog(capacity=0)
