@@ -59,9 +59,9 @@ def get_index(dataset: str, hot: float = 0.03):
         with open(path, "rb") as f:
             return pickle.load(f)
     cfg = proxima_config(dataset, hot)
-    t0 = time.time()
+    t0 = time.perf_counter()
     idx = build_index(cfg, reorder_samples=64)
-    print(f"# built {key} in {time.time()-t0:.1f}s")
+    print(f"# built {key} in {time.perf_counter()-t0:.1f}s")
     with open(path, "wb") as f:
         pickle.dump(idx, f)
     return idx
@@ -71,10 +71,10 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     """(result, us_per_call)."""
     for _ in range(warmup):
         out = fn(*args)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
-    return out, (time.time() - t0) / iters * 1e6
+    return out, (time.perf_counter() - t0) / iters * 1e6
 
 
 # --------------------------------------------------------------------- recall

@@ -23,11 +23,11 @@ from repro.core.ivf import build_ivf, search_ivf
 def _qps(fn, queries, iters=3):
     out = fn(queries)
     jax.block_until_ready(out.ids)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(queries)
         jax.block_until_ready(out.ids)
-    dt = (time.time() - t0) / iters
+    dt = (time.perf_counter() - t0) / iters
     return out, queries.shape[0] / dt
 
 
@@ -63,9 +63,9 @@ def main(out=print) -> None:
             num_subvectors=idx.codebook.num_subvectors, num_centroids=256,
             kmeans_iters=8), metric, nlist=64)
         for nprobe in (2, 8, 16):
-            t0 = time.time()
+            t0 = time.perf_counter()
             ids, _, scanned = search_ivf(ivf, q, 10, nprobe=nprobe)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             rec = recall_at_k(ids, gt, 10)
             out(f"fig11/{ds}/ivf-pq/np{nprobe},{dt/q.shape[0]*1e6:.1f},"
                 f"recall={rec:.4f};scanned={scanned.mean():.0f}")

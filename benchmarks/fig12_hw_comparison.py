@@ -36,10 +36,10 @@ def main(out=print) -> None:
     corpus = idx.corpus()
     res = search(corpus, q, cfg, idx.dataset.metric)
     jax.block_until_ready(res.ids)
-    t0 = time.time()
+    t0 = time.perf_counter()
     res = search(corpus, q, cfg, idx.dataset.metric)
     jax.block_until_ready(res.ids)
-    cpu_qps = q.shape[0] / (time.time() - t0)
+    cpu_qps = q.shape[0] / (time.perf_counter() - t0)
     out(f"fig12/{ds}/cpu-jax,{1e6/cpu_qps:.1f},qps={cpu_qps:.0f};"
         f"qps_per_w={cpu_qps/CPU_TDP_W:.1f};measured=true")
     tr = trace_from_search_result(

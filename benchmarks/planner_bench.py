@@ -51,19 +51,19 @@ def main(out=print, smoke: bool = False) -> None:
     # ---- batch search latency (the denominator), per strategy warm --------
     for r in requests[:3]:
         searcher.search(r)                               # warm compiles
-    t0 = time.time()
+    t0 = time.perf_counter()
     reps = 3 if smoke else 6
     for _ in range(reps):
         for r in requests[:3]:
             searcher.search(r)
-    batch_s = (time.time() - t0) / (3 * reps)
+    batch_s = (time.perf_counter() - t0) / (3 * reps)
 
     # ---- plan dispatch cost ------------------------------------------------
     h0 = searcher.plan_cache_stats()
-    t0 = time.time()
+    t0 = time.perf_counter()
     for r in requests:
         searcher.plan(r)
-    plan_s = (time.time() - t0) / len(requests)
+    plan_s = (time.perf_counter() - t0) / len(requests)
     h1 = searcher.plan_cache_stats()
     hits = h1["plan_cache_hits"] - h0["plan_cache_hits"]
     misses = h1["plan_cache_misses"] - h0["plan_cache_misses"]
@@ -81,10 +81,10 @@ def main(out=print, smoke: bool = False) -> None:
     searcher_obs = Searcher.open(idx, cfg=cfg, obs=obs)
     for r in requests[:3]:
         searcher_obs.plan(r)                             # warm the plan cache
-    t0 = time.time()
+    t0 = time.perf_counter()
     for r in requests:
         searcher_obs.plan(r)
-    plan_obs_s = (time.time() - t0) / len(requests)
+    plan_obs_s = (time.perf_counter() - t0) / len(requests)
     # normalize the delta by BATCH latency, not by the microsecond-scale
     # dispatch itself — two tiny timings compared directly are runner noise
     obs_share = (plan_obs_s - plan_s) / max(batch_s, 1e-12)
@@ -108,10 +108,10 @@ def main(out=print, smoke: bool = False) -> None:
     qm = obs_q.quality
     qm.observe(searcher_q, plan_q, r0.queries, ex.ids)   # warm the oracle
     q_reps = 20 if smoke else 50
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(q_reps):
         qm.observe(searcher_q, plan_q, r0.queries, ex.ids)
-    quality_s = (time.time() - t0) / q_reps
+    quality_s = (time.perf_counter() - t0) / q_reps
     quality_share = quality_s / max(batch_s, 1e-12)
 
     out(f"planner/quality_tax,{quality_s * 1e6:.2f},"

@@ -79,11 +79,11 @@ def main() -> None:
     for modname in MODULES:
         if only and not selected(modname, only):
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{modname}", fromlist=["main"])
             mod.main(out=print)
-            print(f"# {modname} done in {time.time()-t0:.1f}s", file=sys.stderr)
+            print(f"# {modname} done in {time.perf_counter()-t0:.1f}s", file=sys.stderr)
         except Exception:
             print(f"{modname}/FAILED,0.0,{traceback.format_exc().splitlines()[-1]}")
             traceback.print_exc(file=sys.stderr)
@@ -93,7 +93,7 @@ def main() -> None:
         import os
         import subprocess
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         env = dict(os.environ)
         r = subprocess.run(
             [sys.executable, "-m", "benchmarks.proxima_dryrun"],
@@ -106,7 +106,7 @@ def main() -> None:
             print(f"proxima_dryrun/FAILED,0.0,rc={r.returncode}")
             print(r.stderr[-1500:], file=sys.stderr)
         else:
-            print(f"# proxima_dryrun done in {time.time()-t0:.1f}s",
+            print(f"# proxima_dryrun done in {time.perf_counter()-t0:.1f}s",
                   file=sys.stderr)
 
 

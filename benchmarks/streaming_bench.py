@@ -58,10 +58,10 @@ def main(out=print) -> None:
         # planner regressions fail loudly: a mutable target must take the
         # base+delta merged spine
         assert res.plan.kind == "merged", res.plan.kind
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(3):
             res = searcher.search(req)
-        dt = (time.time() - t0) / 3
+        dt = (time.perf_counter() - t0) / 3
         rec = recall_at_k(res.ids, gt, 10)
         qps = queries.shape[0] / dt
         out(f"streaming/delta{int(frac*100)}pct,{dt/queries.shape[0]*1e6:.1f},"
@@ -70,9 +70,9 @@ def main(out=print) -> None:
         base_res = res
 
     # ---- consolidation restores the single-segment path --------------------
-    t0 = time.time()
+    t0 = time.perf_counter()
     mut.consolidate()
-    dt_cons = time.time() - t0
+    dt_cons = time.perf_counter() - t0
     ext_ids, vecs = mut.live_vectors()
     gt = ext_ids[exact_knn(queries, vecs, 10, metric)]
     res = Searcher.open(mut).search(SearchRequest(queries=queries))
@@ -84,7 +84,7 @@ def main(out=print) -> None:
     eng = ServingEngine(MutableIndex(get_index("sift-like")), batch_size=16,
                         flush_us=0.0)
     new_vecs = _perturbed(idx.dataset.base, 400, rng)
-    t0 = time.time()
+    t0 = time.perf_counter()
     ops = 0
     vi = 0
     inserted: list[int] = []
@@ -99,7 +99,7 @@ def main(out=print) -> None:
         ops += 7 + (1 if i % 8 == 7 else 0)
         eng.step()
     eng.drain()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     out(f"streaming/mixed-engine,{dt/ops*1e6:.1f},"
         f"ops_per_s={ops/dt:.0f};batches={eng.stats['batches']};"
         f"consolidations={eng.stats['consolidations']}")

@@ -1,0 +1,40 @@
+"""``proxlint`` — repo-aware static analysis for the serving-stack contracts.
+
+Every invariant this repo's layers depend on — hashable ``QueryPlan`` cache
+keys, pow2-bucketed jit shapes with Python-visible arguments marked static,
+monotonic clocks in latency paths, bounded metric-label cardinality, the
+``upgrade_config`` forward-compat contract — used to be enforced only at
+runtime (``KernelWatch``, the plan-equivalence CI step) or not at all, and
+each has already been violated once in the PR history (the ``time.time()``
+flush-timeout bug, the missing ``static_argnames`` on
+``distributed_search_kernel``, the ``getattr`` config shims).  ``proxlint``
+moves those contracts to compile time: an AST rule engine
+(:mod:`repro.analysis.engine`), one visitor class per contract
+(:mod:`repro.analysis.rules`), inline ``# proxlint: disable=RULE``
+suppressions, and a checked-in justified baseline
+(:mod:`repro.analysis.baseline`) for grandfathered findings.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis check src benchmarks
+    PYTHONPATH=src python -m repro.analysis check --list-rules
+    PYTHONPATH=src python -m repro.analysis check --update-baseline src benchmarks
+
+The tier-1 pytest bridge (:mod:`repro.analysis.pytest_bridge`, consumed by
+``tests/test_analysis.py``) reports each non-baselined finding as an
+individual test failure, so a contract violation fails CI with a
+``file:line`` pointer before it can reach the device.
+"""
+from repro.analysis.baseline import (  # noqa: F401
+    Baseline,
+    BaselineEntry,
+    DEFAULT_BASELINE_PATH,
+)
+from repro.analysis.engine import (  # noqa: F401
+    Finding,
+    Report,
+    Severity,
+    check_paths,
+    check_source,
+)
+from repro.analysis.rules import ALL_RULES, get_rule  # noqa: F401

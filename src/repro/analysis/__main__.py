@@ -1,0 +1,73 @@
+"""proxlint CLI.
+
+    PYTHONPATH=src python -m repro.analysis check src benchmarks
+    PYTHONPATH=src python -m repro.analysis check --list-rules
+    PYTHONPATH=src python -m repro.analysis check --update-baseline src benchmarks
+
+Exit status: 0 when every finding is baselined (with no stale baseline
+entries and no parse errors), 1 otherwise — the CI ``lint`` job gates on
+this.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.baseline import Baseline, DEFAULT_BASELINE_PATH
+from repro.analysis.engine import check_paths
+from repro.analysis.rules import ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser("check", help="run every rule over the given paths")
+    chk.add_argument("paths", nargs="*", default=None,
+                     help="files/dirs to scan (default: src benchmarks)")
+    chk.add_argument("--baseline", default=DEFAULT_BASELINE_PATH,
+                     help="baseline file (default: %(default)s)")
+    chk.add_argument("--no-baseline", action="store_true",
+                     help="report every finding, ignoring the baseline")
+    chk.add_argument("--update-baseline", action="store_true",
+                     help="rewrite the baseline to cover current findings "
+                          "(carries justifications over; new entries get a "
+                          "TODO placeholder to edit)")
+    chk.add_argument("--list-rules", action="store_true",
+                     help="print rule ids and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for cls in ALL_RULES:
+            print(f"{cls.id:24s} [{cls.severity}] {cls.doc}")
+        return 0
+
+    paths = args.paths or ["src", "benchmarks"]
+    baseline = Baseline(()) if args.no_baseline \
+        else Baseline.load(args.baseline)
+    report = check_paths(paths, baseline=baseline)
+
+    if args.update_baseline:
+        new_baseline = Baseline.from_findings(report.findings, old=baseline)
+        new_baseline.save(args.baseline)
+        print(f"baseline written: {args.baseline} "
+              f"({len(new_baseline.entries)} entries)")
+        return 0
+
+    for err in report.parse_errors:
+        print(err, file=sys.stderr)
+    for f in report.new:
+        print(f.render())
+    for e in report.stale:
+        print(e.render())
+
+    n_err = sum(1 for f in report.new if f.severity == "error")
+    n_warn = len(report.new) - n_err
+    print(f"proxlint: {n_err} error(s), {n_warn} warning(s), "
+          f"{len(report.baselined)} baselined, {len(report.stale)} stale "
+          f"baseline entr{'y' if len(report.stale) == 1 else 'ies'}, "
+          f"{len(report.parse_errors)} parse error(s)")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

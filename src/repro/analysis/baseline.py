@@ -1,0 +1,106 @@
+"""Checked-in proxlint baseline — grandfathered findings WITH justification.
+
+The baseline is the pressure valve that lets the lint gate be strict from
+day one: a finding that is intentional (a dynamic-registry import, a
+bounded dynamic metric-name loop) is recorded here with a human
+justification instead of being silently suppressed in code.  Two contracts
+keep it honest:
+
+* every entry must still match a live finding — an entry whose flagged
+  line changed or disappeared is *stale* and fails the check (the
+  grandfathered debt cannot outlive the code it excused);
+* entries match on ``(rule, path, stripped-source-line)``, not line
+  numbers, so unrelated edits never invalidate the baseline but any edit
+  to the flagged line itself does.
+
+Format (``proxlint.baseline.json`` at the repo root)::
+
+    {"entries": [{"rule": ..., "path": ..., "line_text": ...,
+                  "justification": ...}, ...]}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Sequence, Tuple
+
+DEFAULT_BASELINE_PATH = "proxlint.baseline.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    line_text: str
+    justification: str = ""
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.line_text)
+
+    def render(self) -> str:
+        return (f"{self.path}: [{self.rule}] baseline entry no longer "
+                f"matches any finding (line was {self.line_text!r}) — "
+                f"remove or refresh it")
+
+
+class Baseline:
+    """An ordered set of :class:`BaselineEntry`, loadable/saveable as JSON."""
+
+    def __init__(self, entries: Sequence[BaselineEntry] = ()):
+        self.entries: List[BaselineEntry] = list(entries)
+
+    # ------------------------------------------------------------------ io
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls(())
+        with open(path, "r", encoding="utf-8") as f:
+            payload = json.load(f)
+        return cls([BaselineEntry(**e) for e in payload.get("entries", [])])
+
+    def save(self, path: str) -> None:
+        payload = {"entries": [dataclasses.asdict(e) for e in self.entries]}
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    # ------------------------------------------------------------- matching
+    def split(self, findings):
+        """(new, covered, stale): findings not/FOUND in the baseline, plus
+        entries matching no finding. A baseline entry may cover several
+        findings with identical keys (one getattr shim pattern repeated on
+        one line never happens in practice, but matching is set-based)."""
+        keys = {e.key: e for e in self.entries}
+        new, covered = [], []
+        used = set()
+        for f in findings:
+            e = keys.get(f.baseline_key)
+            if e is None:
+                new.append(f)
+            else:
+                covered.append(f)
+                used.add(e.key)
+        stale = [e for e in self.entries if e.key not in used]
+        return new, covered, stale
+
+    @classmethod
+    def from_findings(cls, findings, old: "Baseline" = None) -> "Baseline":
+        """Baseline covering exactly ``findings`` — justifications carried
+        over from ``old`` where the key survives, placeholder otherwise
+        (``--update-baseline``; placeholders are meant to be edited)."""
+        old_keys = {e.key: e for e in (old.entries if old else [])}
+        entries, seen = [], set()
+        for f in findings:
+            if f.baseline_key in seen:
+                continue
+            seen.add(f.baseline_key)
+            prev = old_keys.get(f.baseline_key)
+            entries.append(BaselineEntry(
+                rule=f.rule, path=f.path, line_text=f.line_text,
+                justification=prev.justification if prev is not None
+                else "TODO: justify or fix",
+            ))
+        entries.sort(key=lambda e: (e.path, e.rule, e.line_text))
+        return cls(entries)

@@ -1,0 +1,250 @@
+"""proxlint rule engine — findings, suppressions, file walking.
+
+A *rule* is a class with an ``id``, a default severity, and a ``check``
+method producing :class:`Finding`s from a parsed file
+(:class:`FileContext`).  Repo-wide rules (import-graph analyses) set
+``project_rule = True`` and implement ``check_project`` over every scanned
+file at once.
+
+Suppressions are inline comments, narrowest-wins:
+
+* ``# proxlint: disable=rule-a,rule-b`` on the finding's line suppresses
+  those rules for that line only;
+* ``# proxlint: disable-file=rule-a`` anywhere in a file suppresses the
+  rule for the whole file.
+
+Anything intentional but repo-visible goes in the checked-in baseline
+instead (:mod:`repro.analysis.baseline`) so it carries a justification and
+goes stale loudly when the code it covered changes.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("error", "warning")
+Severity = str  # "error" | "warning"
+
+_SUPPRESS_RE = re.compile(r"#\s*proxlint:\s*disable=([\w,\-\s]+)")
+_SUPPRESS_FILE_RE = re.compile(r"#\s*proxlint:\s*disable-file=([\w,\-\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to ``path:line``.
+
+    ``line_text`` is the stripped source line (or a symbolic key for
+    module-granularity findings) — it is the baseline-matching identity, so
+    baselines survive unrelated edits that only shift line numbers, and go
+    stale when the flagged line itself changes.
+    """
+    rule: str
+    path: str                  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    fix_hint: str = ""
+    severity: Severity = "error"
+    line_text: str = ""
+
+    @property
+    def baseline_key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.line_text)
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}"
+        out = f"{loc}: [{self.rule}] {self.severity}: {self.message}"
+        if self.fix_hint:
+            out += f"\n    fix: {self.fix_hint}"
+        return out
+
+
+class FileContext:
+    """One parsed source file plus the per-line suppression table."""
+
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.line_disables: Dict[int, set] = {}
+        self.file_disables: set = set()
+        for i, line in enumerate(self.lines, start=1):
+            if "proxlint" not in line:
+                continue
+            m = _SUPPRESS_FILE_RE.search(line)
+            if m:
+                self.file_disables.update(
+                    r.strip() for r in m.group(1).split(",") if r.strip())
+                continue
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                self.line_disables[i] = {
+                    r.strip() for r in m.group(1).split(",") if r.strip()}
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_disables:
+            return True
+        return rule in self.line_disables.get(line, set())
+
+    def finding(self, rule: "Rule", node, message: str,
+                fix_hint: Optional[str] = None,
+                severity: Optional[Severity] = None) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            rule=rule.id, path=self.rel, line=line, col=col, message=message,
+            fix_hint=rule.fix_hint if fix_hint is None else fix_hint,
+            severity=rule.severity if severity is None else severity,
+            line_text=self.line_text(line),
+        )
+
+
+class Rule:
+    """Base rule: subclass, set ``id``/``severity``/``fix_hint``, implement
+    ``check`` (or ``check_project`` with ``project_rule = True``)."""
+
+    id: str = ""
+    severity: Severity = "error"
+    fix_hint: str = ""
+    #: one line for ``--list-rules`` and the README rule table
+    doc: str = ""
+    #: True -> ``check_project(ctxs)`` runs once over the whole file set
+    project_rule: bool = False
+    #: repo root for project rules that consult files outside the scanned
+    #: set (set by the runner from ``check_paths(root=...)``)
+    root: str = "."
+
+    def applies(self, rel: str) -> bool:
+        """Scope gate — override to restrict a rule to subtrees."""
+        return True
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, ctxs: Sequence[FileContext]) -> Iterable[Finding]:
+        return ()
+
+
+@dataclasses.dataclass
+class Report:
+    """One ``check`` run: every finding after suppressions, split against
+    the baseline, plus baseline entries that no longer match anything."""
+    findings: List[Finding]            # all non-suppressed findings
+    new: List[Finding]                 # not covered by the baseline
+    baselined: List[Finding]           # covered by the baseline
+    stale: List                        # BaselineEntry no longer matching
+    parse_errors: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.new and not self.stale and not self.parse_errors
+
+
+def _walk_py(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if not d.startswith(".") and d != "__pycache__")
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    out.append(os.path.join(dirpath, f))
+    return out
+
+
+def _relpath(path: str, root: str) -> str:
+    rel = os.path.relpath(os.path.abspath(path), os.path.abspath(root))
+    return rel.replace(os.sep, "/")
+
+
+def load_contexts(paths: Sequence[str], root: str = ".",
+                  ) -> Tuple[List[FileContext], List[str]]:
+    ctxs: List[FileContext] = []
+    errors: List[str] = []
+    for path in _walk_py(paths):
+        rel = _relpath(path, root)
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                source = f.read()
+            ctxs.append(FileContext(path, rel, source))
+        except (OSError, SyntaxError) as e:
+            errors.append(f"{rel}: unparseable: {e}")
+    return ctxs, errors
+
+
+def run_rules(ctxs: Sequence[FileContext],
+              rules: Optional[Sequence[Rule]] = None,
+              root: str = ".") -> List[Finding]:
+    """Every non-suppressed finding over the given files, stably ordered."""
+    if rules is None:
+        from repro.analysis.rules import ALL_RULES
+        rules = [cls() for cls in ALL_RULES]
+    by_rel = {c.rel: c for c in ctxs}
+    findings: List[Finding] = []
+    for rule in rules:
+        rule.root = root
+        if rule.project_rule:
+            scoped = [c for c in ctxs if rule.applies(c.rel)]
+            produced = rule.check_project(scoped)
+        else:
+            produced = []
+            for ctx in ctxs:
+                if rule.applies(ctx.rel):
+                    produced.extend(rule.check(ctx))
+        for f in produced:
+            ctx = by_rel.get(f.path)
+            if ctx is not None and ctx.suppressed(f.rule, f.line):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def check_paths(paths: Sequence[str], root: str = ".",
+                baseline=None,
+                rules: Optional[Sequence[Rule]] = None) -> Report:
+    """Scan ``paths`` and split findings against ``baseline`` (a
+    :class:`repro.analysis.baseline.Baseline` or None)."""
+    ctxs, errors = load_contexts(paths, root=root)
+    findings = run_rules(ctxs, rules=rules, root=root)
+    if baseline is None:
+        from repro.analysis.baseline import Baseline
+        baseline = Baseline(())
+    new, covered, stale = baseline.split(findings)
+    return Report(findings=findings, new=new, baselined=covered,
+                  stale=stale, parse_errors=errors)
+
+
+def check_source(source: str, rel: str = "<string>.py",
+                 rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Rule-fixture entry point: findings for one in-memory source blob
+    (what ``tests/test_analysis.py`` drives its per-rule fixtures through)."""
+    ctx = FileContext(rel, rel, source)
+    if rules is None:
+        from repro.analysis.rules import ALL_RULES
+        rules = [cls() for cls in ALL_RULES]
+    out: List[Finding] = []
+    for rule in rules:
+        if rule.project_rule:
+            produced = rule.check_project([ctx])
+        elif rule.applies(rel):
+            produced = rule.check(ctx)
+        else:
+            produced = ()
+        out.extend(f for f in produced if not ctx.suppressed(f.rule, f.line))
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out

@@ -1,0 +1,40 @@
+"""pytest bridge — proxlint as a tier-1 test, one failure per finding.
+
+``tests/test_analysis.py`` calls :func:`finding_params` at collection time
+and parametrizes one test per non-baselined finding (plus one per stale
+baseline entry), so a contract violation fails CI as an individual test
+named ``path:line [rule]`` instead of one opaque suite failure.  A clean
+tree collects a single passing sentinel.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.analysis.baseline import Baseline
+from repro.analysis.engine import Report, check_paths
+
+CLEAN = "proxlint-clean"
+
+
+def run(paths, root: str = ".", baseline_path: Optional[str] = None) -> Report:
+    baseline = Baseline.load(baseline_path) if baseline_path else Baseline(())
+    return check_paths(paths, root=root, baseline=baseline)
+
+
+def finding_params(report: Report) -> List[Tuple[str, Optional[str]]]:
+    """(test id, failure message) pairs for pytest.mark.parametrize.
+
+    Each new finding becomes ``("src/x.py:12 [rule-id]", rendered)``; each
+    stale baseline entry and parse error gets its own param too.  A clean
+    report returns the single passing sentinel ``(CLEAN, None)``.
+    """
+    params: List[Tuple[str, Optional[str]]] = []
+    for f in report.new:
+        params.append((f"{f.path}:{f.line} [{f.rule}]", f.render()))
+    for e in report.stale:
+        params.append((f"{e.path} [stale-baseline:{e.rule}]", e.render()))
+    for err in report.parse_errors:
+        params.append((f"[parse-error] {err.split(':')[0]}", err))
+    if not params:
+        params.append((CLEAN, None))
+    return params

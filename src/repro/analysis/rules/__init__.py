@@ -1,0 +1,41 @@
+"""proxlint rule registry — one module per contract, one class per rule.
+
+Adding a rule: subclass :class:`repro.analysis.engine.Rule` in a new module
+here, set ``id`` / ``severity`` / ``fix_hint`` / ``doc``, implement
+``check`` (per-file AST) or ``check_project`` (repo-wide), and append the
+class to :data:`ALL_RULES`.  Give it a positive + negative fixture in
+``tests/test_analysis.py`` — the fixture must encode the bug pattern the
+rule exists to prevent, so the rule cannot silently stop firing.
+"""
+from __future__ import annotations
+
+from typing import List, Type
+
+from repro.analysis.engine import Rule
+from repro.analysis.rules.config_compat import ConfigForwardCompatRule
+from repro.analysis.rules.dtype_hygiene import DtypeHygieneRule
+from repro.analysis.rules.jit_static_args import JitStaticArgsRule
+from repro.analysis.rules.metric_names import MetricNameLiteralsRule
+from repro.analysis.rules.monotonic_clock import MonotonicClockRule
+from repro.analysis.rules.plan_hashability import PlanHashabilityRule
+from repro.analysis.rules.tracer_leak import TracerLeakRule
+from repro.analysis.rules.unreferenced import UnreferencedModuleRule
+
+ALL_RULES: List[Type[Rule]] = [
+    JitStaticArgsRule,
+    PlanHashabilityRule,
+    MonotonicClockRule,
+    MetricNameLiteralsRule,
+    ConfigForwardCompatRule,
+    TracerLeakRule,
+    DtypeHygieneRule,
+    UnreferencedModuleRule,
+]
+
+
+def get_rule(rule_id: str) -> Rule:
+    for cls in ALL_RULES:
+        if cls.id == rule_id:
+            return cls()
+    raise KeyError(f"unknown rule {rule_id!r}; "
+                   f"known: {sorted(c.id for c in ALL_RULES)}")

@@ -1,0 +1,155 @@
+"""Shared AST helpers for proxlint rules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """The base Name of an attribute chain: ``cfg`` for ``cfg.a.b``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def is_str_constant(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and isinstance(node.value, str)
+
+
+def _is_jit_callable(node: ast.AST) -> bool:
+    """``jax.jit`` / bare ``jit`` imported from jax."""
+    d = dotted_name(node)
+    return d in ("jax.jit", "jit")
+
+
+def jit_decoration(dec: ast.AST) -> Optional[Tuple[Set[str], Set[int]]]:
+    """If ``dec`` is a jit decoration, return (static_argnames,
+    static_argnums); else None.
+
+    Recognized forms::
+
+        @jax.jit
+        @partial(jax.jit, static_argnames=(...), static_argnums=(...))
+        @functools.partial(jax.jit, ...)
+        jax.jit(fn, static_argnames=..., static_argnums=...)   (call form)
+    """
+    if _is_jit_callable(dec):
+        return set(), set()
+    if not isinstance(dec, ast.Call):
+        return None
+    fn = dotted_name(dec.func)
+    if _is_jit_callable(dec.func):
+        # jax.jit(fn, static_...=...) call form
+        return _static_kwargs(dec.keywords)
+    if fn in ("partial", "functools.partial") and dec.args \
+            and _is_jit_callable(dec.args[0]):
+        return _static_kwargs(dec.keywords)
+    return None
+
+
+def _static_kwargs(keywords: Sequence[ast.keyword]) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            names |= _const_strs(kw.value)
+        elif kw.arg == "static_argnums":
+            nums |= _const_ints(kw.value)
+    return names, nums
+
+
+def _const_strs(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    if is_str_constant(node):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for e in node.elts:
+            if is_str_constant(e):
+                out.add(e.value)
+    return out
+
+
+def _const_ints(node: ast.AST) -> Set[int]:
+    out: Set[int] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.add(e.value)
+    return out
+
+
+def param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return params
+
+
+def static_params(fn: ast.AST, statics: Tuple[Set[str], Set[int]]) -> Set[str]:
+    """Parameter names marked static by (argnames, argnums)."""
+    names, nums = statics
+    positional = [p.arg for p in fn.args.posonlyargs + fn.args.args]
+    out = set(names)
+    for i in nums:
+        if 0 <= i < len(positional):
+            out.add(positional[i])
+    return out
+
+
+def jitted_functions(tree: ast.Module) -> Iterable[
+        Tuple[ast.AST, Tuple[Set[str], Set[int]]]]:
+    """Every (function def, statics) jitted in the module — via decorator,
+    or via a module/function-level ``jax.jit(name, ...)`` call referencing a
+    def in the same file."""
+    defs = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+            for dec in node.decorator_list:
+                statics = jit_decoration(dec)
+                if statics is not None:
+                    yield node, statics
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit_callable(node.func) \
+                and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Name) and target.id in defs:
+                yield defs[target.id], _static_kwargs(node.keywords)
+            elif isinstance(target, ast.Lambda):
+                yield target, _static_kwargs(node.keywords)
+
+
+def dataclass_frozen(cls: ast.ClassDef) -> bool:
+    """True when decorated ``@dataclass(frozen=True)`` (dataclasses.dataclass
+    and bare dataclass forms)."""
+    for dec in cls.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        if dotted_name(dec.func) not in ("dataclass", "dataclasses.dataclass"):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "frozen" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is True:
+                return True
+    return False

@@ -1,0 +1,58 @@
+"""config-forward-compat — no ``getattr(cfg, "field", default)`` shims.
+
+Pickled index caches outlive config schema growth, and the repo's contract
+for that (since PR8) is ``configs.upgrade_config``: rebuild the config with
+current defaults ONCE at the deserialization boundary, then access fields
+directly.  Per-site ``getattr(cfg, "field", default)`` shims silently
+drift — each site hardcodes its own default, and a renamed field keeps
+"working" with a stale value instead of failing.
+
+The rule fires on 3-argument ``getattr`` with a string-literal field name
+whose receiver is config-shaped: a name like ``cfg``/``config``/``*_cfg``/
+``*cfg``, or an attribute chain ending in ``.cfg``/``.config``.  Capability
+probes on heterogeneous non-config objects (``getattr(index, "attributes",
+None)``) are out of scope.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import FileContext, Rule
+from repro.analysis.rules._ast_util import is_str_constant
+
+_CONFIG_NAMES = {"cfg", "config", "conf"}
+
+
+def _is_config_receiver(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name):
+        n = node.id.lower()
+        return n in _CONFIG_NAMES or n.endswith("cfg") or n.endswith("config")
+    if isinstance(node, ast.Attribute):
+        a = node.attr.lower()
+        return a in _CONFIG_NAMES or a.endswith("cfg") or a.endswith("config")
+    return False
+
+
+class ConfigForwardCompatRule(Rule):
+    id = "config-forward-compat"
+    severity = "error"
+    fix_hint = ("upgrade once at the boundary with configs.upgrade_config("
+                "cfg) and read the field directly")
+    doc = ("getattr(cfg, \"field\", default) config shims — the PR8 "
+           "upgrade_config contract")
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "getattr"
+                    and len(node.args) == 3
+                    and is_str_constant(node.args[1])):
+                continue
+            if _is_config_receiver(node.args[0]):
+                field = node.args[1].value
+                yield ctx.finding(
+                    self, node,
+                    f"getattr config shim for field {field!r} — per-site "
+                    f"defaults drift from the schema",
+                )

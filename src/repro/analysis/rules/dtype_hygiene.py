@@ -1,0 +1,121 @@
+"""dtype-hygiene — int32 node ids, no float64 leaking into the kernels.
+
+Two numeric contracts in ``core/`` and ``kernels/``:
+
+* **node-id arrays are int32** — ids index adjacency/code pages on device;
+  a 64-bit id array doubles gather bandwidth and silently promotes every
+  downstream index computation.  Constructing an id-named array
+  (``ids`` / ``*_ids``) without an explicit int32 dtype is a finding.
+* **no float64 into jnp ops** — jax defaults to float32 (x64 disabled);
+  an explicit ``np.float64`` literal/cast flowing into a jitted op either
+  silently downcasts or, with x64 enabled, doubles NAND transfer sizes and
+  splits the jit cache by dtype.  ``np.float64(...)``, ``astype(np.float64)``
+  and ``dtype=np.float64`` are findings.
+
+Deliberate wide integers (the uint64 gap-encoding bitstream, int64 scatter
+indices) are untouched — the rule looks at float64 and id-*named* arrays
+only.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import FileContext, Rule
+from repro.analysis.rules._ast_util import dotted_name
+
+_CONSTRUCTORS = {"arange", "zeros", "ones", "full", "empty"}
+#: positional index of the dtype argument per constructor
+_DTYPE_POS = {"arange": 3, "zeros": 1, "ones": 1, "full": 2, "empty": 1}
+_F64_SPELLINGS = {"np.float64", "numpy.float64", "jnp.float64", "float64"}
+_I32_SPELLINGS = {"np.int32", "numpy.int32", "jnp.int32", "int32"}
+
+
+def _dtype_spelling(node: ast.AST):
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return dotted_name(node)
+
+
+def _id_named(name: str) -> bool:
+    return name == "ids" or name.endswith("_ids") or name.rstrip("0123456789") == "ids"
+
+
+class DtypeHygieneRule(Rule):
+    id = "dtype-hygiene"
+    severity = "error"
+    doc = ("node-id arrays not constructed int32, or float64 literals/casts "
+           "in core//kernels/ — bandwidth and jit-cache-split guard")
+
+    def applies(self, rel: str) -> bool:
+        parts = rel.split("/")
+        return "core" in parts or "kernels" in parts
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func)
+            # --- float64 ---------------------------------------------------
+            if d in _F64_SPELLINGS:
+                yield ctx.finding(
+                    self, node,
+                    f"bare {d}(...) in the kernel tree — jax is float32 "
+                    f"by default and float64 doubles transfer sizes",
+                    fix_hint="use float32 (or jnp.asarray(..., dtype=...) "
+                             "at the host boundary)",
+                )
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args \
+                    and _dtype_spelling(node.args[0]) in _F64_SPELLINGS:
+                yield ctx.finding(
+                    self, node,
+                    "astype(float64) in the kernel tree",
+                    fix_hint="use float32 (or justify via the baseline if "
+                             "the width is load-bearing)",
+                )
+                continue
+            for kw in node.keywords:
+                if kw.arg == "dtype" \
+                        and _dtype_spelling(kw.value) in _F64_SPELLINGS:
+                    yield ctx.finding(
+                        self, node,
+                        "dtype=float64 in the kernel tree",
+                        fix_hint="use float32 (or justify via the baseline)",
+                    )
+
+        # --- id-named constructions ---------------------------------------
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            target = node.targets[0]
+            if not (isinstance(target, ast.Name) and _id_named(target.id)):
+                continue
+            value = node.value
+            if not isinstance(value, ast.Call):
+                continue
+            d = dotted_name(value.func)
+            if d is None or "." not in d:
+                continue
+            root, leaf = d.split(".")[0], d.split(".")[-1]
+            if root not in ("np", "numpy", "jnp") \
+                    or leaf not in _CONSTRUCTORS:
+                continue
+            dtype = None
+            for kw in value.keywords:
+                if kw.arg == "dtype":
+                    dtype = _dtype_spelling(kw.value)
+            if dtype is None:
+                pos = _DTYPE_POS[leaf]
+                if len(value.args) > pos:
+                    dtype = _dtype_spelling(value.args[pos])
+            if dtype not in _I32_SPELLINGS:
+                got = dtype or "the float/int64 default"
+                yield ctx.finding(
+                    self, node,
+                    f"node-id array `{target.id}` constructed with {got} — "
+                    f"ids must be int32",
+                    fix_hint="pass dtype=np.int32 / jnp.int32 explicitly",
+                )

@@ -1,0 +1,157 @@
+"""jit-static-args — Python-visible jit arguments must be marked static.
+
+The PR5 bug class: ``distributed_search_kernel`` took ``data_axis`` /
+``queue_axis`` (Python strings threaded into collective axis names) without
+listing them in ``static_argnames`` — jax either fails to trace or, worse,
+retraces per value.  An argument is *Python-visible* when the traced body
+consumes it outside the array domain:
+
+* it (or an attribute of it, e.g. ``cfg.use_pq``) appears in an ``if`` /
+  ``while`` test, an ``assert``, or a comprehension ``if`` guard —
+  except pure ``is None`` checks, which jit resolves by pytree structure;
+* it feeds ``range()`` or a subscript *slice* bound (loop trip counts and
+  static shapes);
+* it is coerced with ``int()`` / ``bool()`` / ``float()`` / ``str()`` at
+  the Python level;
+* it is compared against a string literal, or annotated / defaulted ``str``
+  (strings are never valid tracer inputs).
+
+Any such parameter missing from ``static_argnames``/``static_argnums`` is
+a finding.  Scans both decorator jits and ``jax.jit(fn, ...)`` call forms
+resolving ``fn`` in the same module.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from repro.analysis.engine import FileContext, Rule
+from repro.analysis.rules._ast_util import (
+    dotted_name,
+    jitted_functions,
+    static_params,
+)
+
+_COERCIONS = {"int", "bool", "float", "str"}
+
+
+def _is_none_check(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+            and all(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators))
+
+
+def test_names(expr: ast.AST) -> Set[str]:
+    """Name ids consumed by a Python-level test, excluding names that only
+    appear under ``is None`` / ``is not None`` checks (pytree-structural,
+    trace-time safe)."""
+    out: Set[str] = set()
+
+    def visit(node: ast.AST):
+        if _is_none_check(node):
+            return
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+def _str_typed(arg: ast.arg, default) -> bool:
+    if arg.annotation is not None and dotted_name(arg.annotation) == "str":
+        return True
+    return isinstance(default, ast.Constant) and isinstance(default.value, str)
+
+
+def _params_with_defaults(fn):
+    """[(arg, default-or-None)] over positional + kwonly args."""
+    a = fn.args
+    pos = list(a.posonlyargs) + list(a.args)
+    defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+    out = list(zip(pos, defaults))
+    out += list(zip(a.kwonlyargs, a.kw_defaults))
+    return out
+
+
+def _python_visible_uses(fn: ast.AST, params: Set[str]):
+    """{param: reason} for params the body consumes at the Python level."""
+    uses = {}
+
+    def mark(expr: ast.AST, reason: str):
+        for name in test_names(expr) & params:
+            uses.setdefault(name, reason)
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            mark(node.test, "used in a Python `%s` test"
+                 % ("if" if isinstance(node, ast.If) else "while"))
+        elif isinstance(node, ast.IfExp):
+            mark(node.test, "used in a conditional-expression test")
+        elif isinstance(node, ast.Assert):
+            mark(node.test, "used in an assert")
+        elif isinstance(node, ast.comprehension):
+            for guard in node.ifs:
+                mark(guard, "used in a comprehension guard")
+        elif isinstance(node, ast.Call):
+            callee = dotted_name(node.func)
+            if callee == "range":
+                for a in node.args:
+                    mark(a, "drives a range() trip count")
+            elif callee in _COERCIONS and node.args:
+                mark(node.args[0], f"coerced with {callee}()")
+        elif isinstance(node, ast.Slice):
+            for bound in (node.lower, node.upper, node.step):
+                if bound is not None:
+                    mark(bound, "used as a static slice bound")
+        elif isinstance(node, ast.Compare):
+            if any(isinstance(c, ast.Constant) and isinstance(c.value, str)
+                   for c in node.comparators):
+                mark(node, "compared against a string literal")
+    return uses
+
+
+class JitStaticArgsRule(Rule):
+    id = "jit-static-args"
+    severity = "error"
+    fix_hint = ("list the argument in static_argnames (or static_argnums) "
+                "on the jit decoration")
+    doc = ("jitted function consumes an argument in Python control flow / "
+           "shape arithmetic without marking it static — the PR5 "
+           "distributed_search_kernel bug class")
+
+    def check(self, ctx: FileContext):
+        seen = set()
+        for fn, statics in jitted_functions(ctx.tree):
+            key = (getattr(fn, "lineno", 0), getattr(fn, "name", "<lambda>"))
+            if key in seen:
+                continue
+            seen.add(key)
+            static = static_params(fn, statics)
+            fname = getattr(fn, "name", "<lambda>")
+            params: Set[str] = set()
+            if isinstance(fn, ast.Lambda):
+                params = {p.arg for p in fn.args.args} - static
+                uses = _python_visible_uses(fn.body, params)
+            else:
+                for arg, default in _params_with_defaults(fn):
+                    if arg.arg in static or arg.arg == "self":
+                        continue
+                    if _str_typed(arg, default):
+                        yield ctx.finding(
+                            self, fn,
+                            f"jitted `{fname}` takes str-typed argument "
+                            f"`{arg.arg}` without marking it static — "
+                            f"strings are never valid tracer inputs",
+                        )
+                        continue
+                    params.add(arg.arg)
+                uses = _python_visible_uses(fn, params)
+            for name, reason in sorted(uses.items()):
+                yield ctx.finding(
+                    self, fn,
+                    f"jitted `{fname}` argument `{name}` is {reason} "
+                    f"but is not in static_argnames",
+                )

@@ -1,0 +1,66 @@
+"""metric-name-literals — metric/span names must be statically enumerable.
+
+The ``obs`` registry keys cells by ``(name, label set)``.  Label *values*
+are bounded by construction (plan kind, strategy, tenant); a dynamically
+built metric *name* (an f-string, a formatted id, a request field) is an
+unbounded-cardinality leak — every novel name allocates a fresh cell
+forever, and dashboards cannot enumerate the series.  Names passed to
+``metrics.counter/gauge/observe`` and ``tracer.span`` must be string
+literals or module-level UPPER_CASE constants.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import FileContext, Rule
+from repro.analysis.rules._ast_util import is_str_constant
+
+_RECORD_METHODS = {"counter", "gauge", "observe", "span"}
+#: receiver spellings that identify the obs registry / tracer at a call site
+_RECEIVER_NAMES = {"metrics", "registry", "tracer", "m", "reg"}
+
+
+def _is_obs_receiver(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in _RECEIVER_NAMES
+    if isinstance(node, ast.Attribute):
+        return node.attr in _RECEIVER_NAMES
+    return False
+
+
+def _is_constant_name(node: ast.AST) -> bool:
+    """A module-constant reference: ``NAME`` or ``mod.NAME`` (UPPER_CASE)."""
+    if isinstance(node, ast.Name):
+        return node.id.isupper()
+    if isinstance(node, ast.Attribute):
+        return node.attr.isupper()
+    return False
+
+
+class MetricNameLiteralsRule(Rule):
+    id = "metric-name-literals"
+    severity = "error"
+    fix_hint = ("pass a string literal or a module-level CONSTANT as the "
+                "metric/span name; put variability in label values, which "
+                "are bounded by construction")
+    doc = ("dynamic metric/span names on the obs registry — label-"
+           "cardinality explosion guard")
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _RECORD_METHODS
+                    and _is_obs_receiver(node.func.value)
+                    and node.args):
+                continue
+            name_arg = node.args[0]
+            if is_str_constant(name_arg) or _is_constant_name(name_arg):
+                continue
+            kind = "f-string" if isinstance(name_arg, ast.JoinedStr) \
+                else "dynamic expression"
+            yield ctx.finding(
+                self, node,
+                f"metric/span name is a {kind} — every novel name "
+                f"allocates an unbounded registry cell",
+            )

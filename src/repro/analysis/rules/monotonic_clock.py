@@ -1,0 +1,43 @@
+"""monotonic-clock — wall clocks are forbidden in latency paths.
+
+``time.time()`` is wall-clock: it jumps under NTP step corrections, which
+turned the serving engine's flush timeout into an instant flush (the PR6
+bug — submit/_flush_due/step measured queue wait with ``time.time()``).
+Every duration measured in the serving stack (``serve/``, ``obs/``,
+``plan/``) and every benchmark timing loop must use the monotonic
+``time.perf_counter()``.  Wall-clock *timestamps* (log lines, trace epoch
+anchors) are still fine outside those trees.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import FileContext, Rule
+from repro.analysis.rules._ast_util import dotted_name
+
+#: path components whose files are latency paths
+_SCOPED = ("serve", "obs", "plan", "benchmarks")
+
+
+class MonotonicClockRule(Rule):
+    id = "monotonic-clock"
+    severity = "error"
+    fix_hint = ("use time.perf_counter() (monotonic) for anything that is "
+                "subtracted; time.time() jumps under NTP corrections")
+    doc = ("time.time() in serve/, obs/, plan/ or benchmarks/ — the PR6 "
+           "flush-timeout bug class")
+
+    def applies(self, rel: str) -> bool:
+        parts = rel.split("/")
+        return any(p in _SCOPED for p in parts[:-1])
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if dotted_name(node.func) == "time.time":
+                yield ctx.finding(
+                    self, node,
+                    "time.time() in a latency path is wall-clock and "
+                    "non-monotonic",
+                )

@@ -1,0 +1,87 @@
+"""plan-hashability — frozen dataclasses must hash, at field-type level.
+
+``QueryPlan.cache_key`` is the serving layer's batching identity and the
+planner's artifact-cache key; ``PlanConfig``/``SearchConfig``/``FilterSpec``
+ride inside it.  A frozen dataclass *generates* ``__hash__``, so an
+unhashable field (list/dict/set/ndarray) type-checks, constructs, and then
+explodes at the first cache lookup — at runtime, on the serving path.  The
+rule rejects unhashable annotated types on any ``@dataclass(frozen=True)``
+field, recursing through ``Optional``/``Union``/``Tuple`` wrappers.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import FileContext, Rule
+from repro.analysis.rules._ast_util import dataclass_frozen, dotted_name
+
+_UNHASHABLE = {
+    "list": "tuple", "List": "Tuple",
+    "dict": "a frozen mapping (tuple of items)", "Dict": "Tuple[...-items]",
+    "set": "frozenset", "Set": "FrozenSet",
+    "bytearray": "bytes",
+    "np.ndarray": "a tuple (or keep arrays out of cache keys)",
+    "numpy.ndarray": "a tuple (or keep arrays out of cache keys)",
+    "jnp.ndarray": "a tuple (or keep arrays out of cache keys)",
+    "jax.Array": "a tuple (or keep arrays out of cache keys)",
+}
+_WRAPPERS = {"Optional", "Union", "Tuple", "tuple", "typing.Optional",
+             "typing.Union", "typing.Tuple", "FrozenSet", "frozenset",
+             "ClassVar", "Final"}
+
+
+def _unhashable_part(ann: ast.AST):
+    """The offending type spelling inside an annotation, or None."""
+    if ann is None:
+        return None
+    # string annotations ("SearchConfig") — parse and recurse
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:
+            inner = ast.parse(ann.value, mode="eval").body
+        except SyntaxError:
+            return None
+        return _unhashable_part(inner)
+    d = dotted_name(ann)
+    if d in _UNHASHABLE:
+        return d
+    if isinstance(ann, ast.Subscript):
+        base = dotted_name(ann.value)
+        if base in _UNHASHABLE:
+            return base
+        if base in _WRAPPERS or (base or "").split(".")[-1] in _WRAPPERS:
+            inner = ann.slice
+            elts = inner.elts if isinstance(inner, ast.Tuple) else [inner]
+            for e in elts:
+                bad = _unhashable_part(e)
+                if bad:
+                    return bad
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        return _unhashable_part(ann.left) or _unhashable_part(ann.right)
+    return None
+
+
+class PlanHashabilityRule(Rule):
+    id = "plan-hashability"
+    severity = "error"
+    doc = ("unhashable field types on frozen dataclasses — cache-key "
+           "integrity for QueryPlan/PlanConfig/FilterSpec")
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.ClassDef) and dataclass_frozen(node)):
+                continue
+            for stmt in node.body:
+                if not isinstance(stmt, ast.AnnAssign):
+                    continue
+                bad = _unhashable_part(stmt.annotation)
+                if bad:
+                    field = stmt.target.id \
+                        if isinstance(stmt.target, ast.Name) else "?"
+                    yield ctx.finding(
+                        self, stmt,
+                        f"frozen dataclass {node.name}.{field} is annotated "
+                        f"{bad} — hash() raises at the first cache lookup",
+                        fix_hint=f"use {_UNHASHABLE[bad]} instead of {bad}, "
+                                 f"or drop frozen=True if this is not a "
+                                 f"cache-key type",
+                    )

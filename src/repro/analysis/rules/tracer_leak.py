@@ -1,0 +1,143 @@
+"""tracer-leak — no Python control flow on traced values.
+
+Inside a jitted body, array values are tracers: a Python ``if`` / ``while``
+/ ``assert`` on one (or a ``float()`` / ``int()`` / ``bool()`` coercion)
+forces concretization — ``TracerBoolConversionError`` at best, a silent
+trace-time constant at worst (the branch is baked in for every future
+batch).  The rule runs a small flow-insensitive taint pass per jitted
+function: results of ``jnp.*`` / ``jax.*`` / ``lax.*`` calls (and
+assignments derived from them) are traced; consuming a traced name in a
+Python test or a scalar coercion is a finding.
+
+Static-shape reads (``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``x.size``)
+and ``is None`` checks are exempt — both are trace-time constants.
+Bare *parameters* in control flow are jit-static-args' territory; this rule
+tracks values produced inside the body.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from repro.analysis.engine import FileContext, Rule
+from repro.analysis.rules._ast_util import dotted_name, jitted_functions
+
+_TRACED_ROOTS = ("jnp", "jax", "lax", "pl", "plgpu")
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_COERCIONS = {"int", "float", "bool", "complex"}
+
+
+def _is_traced_call(node: ast.Call) -> bool:
+    d = dotted_name(node.func)
+    if not d:
+        return False
+    root = d.split(".")[0]
+    return root in _TRACED_ROOTS
+
+
+def _is_none_check(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+            and all(isinstance(c, ast.Constant) and c.value is None
+                    for c in node.comparators))
+
+
+def _tainted_names_used(expr: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Tainted names consumed by ``expr``, skipping ``is None`` checks and
+    static-shape attribute reads."""
+    out: Set[str] = set()
+
+    def visit(node: ast.AST):
+        if _is_none_check(node):
+            return
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return
+        if isinstance(node, ast.Name) and node.id in tainted:
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+def _expr_tainted(expr: ast.AST, tainted: Set[str]) -> bool:
+    if _tainted_names_used(expr, tainted):
+        return True
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call) and _is_traced_call(node):
+            return True
+    return False
+
+
+def _target_names(target: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+    return out
+
+
+class TracerLeakRule(Rule):
+    id = "tracer-leak"
+    severity = "error"
+    fix_hint = ("replace the Python branch with jnp.where / lax.cond / "
+                "lax.select, or hoist the decision out of the jitted body")
+    doc = ("Python if/while/assert or scalar coercion on a traced value "
+           "inside a jitted body — trace-time concretization")
+
+    def check(self, ctx: FileContext):
+        emitted = set()
+        for fn, statics in jitted_functions(ctx.tree):
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            # taint fixpoint over assignments
+            tainted: Set[str] = set()
+            for _ in range(8):
+                before = len(tainted)
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Assign):
+                        if _expr_tainted(node.value, tainted):
+                            for t in node.targets:
+                                tainted |= _target_names(t)
+                    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)) \
+                            and node.value is not None:
+                        if _expr_tainted(node.value, tainted):
+                            tainted |= _target_names(node.target)
+                if len(tainted) == before:
+                    break
+            # Python for-loop / comprehension targets iterate host values
+            # (dict keys, static ranges) even when the container name is
+            # tainted — a traced array cannot be iterated lane-wise anyway,
+            # so keeping them would only produce name-collision FPs.
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.comprehension)):
+                    tainted -= _target_names(node.target)
+
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.If, ast.While, ast.Assert, ast.IfExp)):
+                    test = node.test
+                    used = _tainted_names_used(test, tainted)
+                    kind = type(node).__name__.lower()
+                    for name in sorted(used):
+                        key = (node.lineno, self.id, name, "branch")
+                        if key in emitted:
+                            continue
+                        emitted.add(key)
+                        yield ctx.finding(
+                            self, node,
+                            f"Python `{kind}` on `{name}`, a value produced "
+                            f"by a traced op inside a jitted body",
+                        )
+                elif isinstance(node, ast.Call):
+                    callee = dotted_name(node.func)
+                    if callee in _COERCIONS and node.args \
+                            and _expr_tainted(node.args[0], tainted):
+                        key = (node.lineno, self.id, callee, "coerce")
+                        if key in emitted:
+                            continue
+                        emitted.add(key)
+                        yield ctx.finding(
+                            self, node,
+                            f"`{callee}()` coercion of a traced value "
+                            f"inside a jitted body concretizes the tracer",
+                        )

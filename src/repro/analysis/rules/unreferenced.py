@@ -1,0 +1,165 @@
+"""unreferenced-module — dead-code audit over the static import graph.
+
+A module under ``src/`` that no live code can reach via *static* imports is
+dead weight: it rots silently (no test imports it transitively), and its
+contracts are never checked by the rest of this suite's runtime-reachable
+guarantees.  The rule computes reachability over the scanned files plus the
+repo's reference universe (``tests/``, ``examples/``, ``scripts/`` —
+sources of truth for what is "live" even when they are not lint targets)
+and flags unreachable src modules.
+
+Exempt by construction:
+
+* ``__main__.py`` and modules with an ``if __name__ == "__main__"`` guard
+  (CLI entry points are roots, not dead code);
+* modules reachable only through a *dynamic* registry
+  (``importlib.import_module`` — e.g. the ``repro.configs`` arch zoo) are
+  NOT exempt: they get flagged and belong in the baseline with a
+  justification naming the registry, so the registry's existence stays
+  documented and a module dropped from it goes stale loudly.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Optional, Sequence, Set
+
+from repro.analysis.engine import FileContext, Rule
+
+_UNIVERSE_DIRS = ("tests", "examples", "scripts")
+
+
+def _module_name(rel: str) -> Optional[str]:
+    """Dotted module for a src-layout path (``src/repro/core/pq.py`` ->
+    ``repro.core.pq``); None for paths outside ``src/``."""
+    parts = rel.split("/")
+    if "src" not in parts:
+        return None
+    parts = parts[parts.index("src") + 1:]
+    if not parts or not parts[-1].endswith(".py"):
+        return None
+    parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+def _has_main_guard(tree: ast.Module) -> bool:
+    for node in tree.body:
+        if isinstance(node, ast.If):
+            t = node.test
+            if isinstance(t, ast.Compare) and isinstance(t.left, ast.Name) \
+                    and t.left.id == "__name__":
+                return True
+    return False
+
+
+def _imports_of(tree: ast.Module, self_module: Optional[str]) -> Set[str]:
+    """Every dotted module an AST references, including package prefixes."""
+    out: Set[str] = set()
+
+    def add(mod: str):
+        parts = mod.split(".")
+        for i in range(1, len(parts) + 1):
+            out.add(".".join(parts[:i]))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:
+                if self_module is None:
+                    continue
+                pkg = self_module.split(".")
+                pkg = pkg[:len(pkg) - node.level] if len(pkg) >= node.level \
+                    else []
+                base = ".".join(pkg + ([base] if base else []))
+            if not base:
+                continue
+            add(base)
+            for alias in node.names:
+                if alias.name != "*":
+                    add(f"{base}.{alias.name}")
+    return out
+
+
+class UnreferencedModuleRule(Rule):
+    id = "unreferenced-module"
+    severity = "warning"
+    project_rule = True
+    fix_hint = ("delete the module (or note it in the README attic); if it "
+                "is reached through a dynamic registry, baseline it with a "
+                "justification naming the registry")
+    doc = ("src/ module unreachable from tests/benchmarks/examples/scripts "
+           "via static imports — dead-code audit")
+
+    #: extra reference-source dirs, resolved against the cwd (repo root);
+    #: overridable for fixtures
+    universe_dirs: Sequence[str] = _UNIVERSE_DIRS
+
+    def check_project(self, ctxs: Sequence[FileContext]):
+        modules: Dict[str, FileContext] = {}
+        for ctx in ctxs:
+            m = _module_name(ctx.rel)
+            if m is not None:
+                modules[m] = ctx
+
+        # roots: every scanned non-src file + the reference universe
+        root_trees = []
+        for ctx in ctxs:
+            if _module_name(ctx.rel) is None:
+                root_trees.append((ctx.tree, None))
+        for d in self.universe_dirs:
+            d = os.path.join(self.root, d)
+            if not os.path.isdir(d):
+                continue
+            for dirpath, dirnames, filenames in os.walk(d):
+                dirnames[:] = [x for x in dirnames if not x.startswith(".")
+                               and x != "__pycache__"]
+                for f in sorted(filenames):
+                    if not f.endswith(".py"):
+                        continue
+                    try:
+                        with open(os.path.join(dirpath, f), "r",
+                                  encoding="utf-8") as fh:
+                            root_trees.append((ast.parse(fh.read()), None))
+                    except (OSError, SyntaxError):
+                        continue
+
+        # CLI entry points inside src are roots too
+        for mod, ctx in modules.items():
+            if ctx.rel.endswith("__main__.py") or _has_main_guard(ctx.tree):
+                root_trees.append((ctx.tree, mod))
+
+        reached: Set[str] = set()
+        queue = set()
+        for tree, self_mod in root_trees:
+            if self_mod is not None:
+                reached.add(self_mod)
+            queue |= _imports_of(tree, self_mod)
+        while queue:
+            mod = queue.pop()
+            if mod in reached or mod not in modules:
+                reached.add(mod)
+                continue
+            reached.add(mod)
+            ctx = modules[mod]
+            queue |= _imports_of(ctx.tree, mod) - reached
+
+        import dataclasses
+
+        for mod in sorted(modules):
+            if mod in reached:
+                continue
+            ctx = modules[mod]
+            if ctx.rel.endswith("__main__.py") or _has_main_guard(ctx.tree):
+                continue
+            f = ctx.finding(
+                self, ctx.tree.body[0] if ctx.tree.body else ctx.tree,
+                f"module `{mod}` is unreachable from any static import "
+                f"(tests, benchmarks, examples, scripts, CLI entries)",
+            )
+            # module-granularity identity: stable under content edits
+            yield dataclasses.replace(f, line_text=f"module:{mod}")

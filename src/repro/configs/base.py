@@ -372,19 +372,31 @@ class ProximaConfig:
     gap_encode: bool = True
 
 
-def upgrade_config(cfg: ProximaConfig) -> ProximaConfig:
-    """Fill in fields added to ``ProximaConfig`` after ``cfg`` was pickled
+def upgrade_config(cfg):
+    """Fill in fields added to ``cfg``'s schema after it was pickled
     (benchmark index caches survive schema growth: a missing field gets its
-    current default). Returns ``cfg`` unchanged when already complete."""
-    missing = [
-        f for f in dataclasses.fields(ProximaConfig)
-        if not hasattr(cfg, f.name)
-    ]
-    if not missing:
+    current default), recursing into nested config dataclasses so fields
+    added to e.g. ``SearchConfig`` are filled even when the pickle predates
+    them. Returns ``cfg`` unchanged when already complete — callers can rely
+    on identity for the common no-op case. Non-dataclass values pass through
+    untouched."""
+    if not dataclasses.is_dataclass(cfg) or isinstance(cfg, type):
+        return cfg
+    cls = type(cfg)
+    changed = {}
+    for f in dataclasses.fields(cls):
+        if not hasattr(cfg, f.name):
+            continue  # missing -> cls(**present) fills the default below
+        old = getattr(cfg, f.name)
+        new = upgrade_config(old)
+        if new is not old:
+            changed[f.name] = new
+    complete = all(hasattr(cfg, f.name) for f in dataclasses.fields(cls))
+    if complete and not changed:
         return cfg
     kwargs = {
-        f.name: getattr(cfg, f.name)
-        for f in dataclasses.fields(ProximaConfig)
+        f.name: changed.get(f.name, getattr(cfg, f.name))
+        for f in dataclasses.fields(cls)
         if hasattr(cfg, f.name)
     }
-    return ProximaConfig(**kwargs)
+    return cls(**kwargs)

@@ -37,7 +37,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import SearchConfig
+from repro.configs.base import SearchConfig, upgrade_config
 from repro.core import bloom
 from repro.core.pq import compute_adt, pq_distance
 from repro.core.search import (
@@ -136,6 +136,7 @@ def distributed_search_kernel(
     of shape (Q, k).
     """
     assert mesh is not None
+    cfg = upgrade_config(cfg)    # pre-beam pickled configs: fill defaults
     if metric == "angular":
         queries = queries / jnp.maximum(
             jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
@@ -147,7 +148,7 @@ def distributed_search_kernel(
     p = corpus.num_shards
     # beam-parallel traversal (core.search semantics): E expansions per
     # round — one (Qb, E*R) collective wave instead of E serial rounds
-    E = min(max(int(getattr(cfg, "beam_width", 1)), 1), L)
+    E = min(max(int(cfg.beam_width), 1), L)
     use_pq = cfg.use_pq
     t_init = cfg.t_init if cfg.early_termination else L
     t_step = cfg.t_step if cfg.early_termination else L

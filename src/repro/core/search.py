@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import SearchConfig
+from repro.configs.base import SearchConfig, upgrade_config
 from repro.core import bloom
 from repro.core.pq import compute_adt, pq_distance
 
@@ -214,10 +214,11 @@ def _round_fns(corpus: Corpus, cfg: SearchConfig, metric: str,
     the vmapped loop, and iterating it until no lane is active reproduces
     the loop's fixpoint exactly (extra steps on a finished batch are
     no-ops)."""
+    cfg = upgrade_config(cfg)    # pre-beam pickled configs: fill defaults
     L, k = cfg.list_size, cfg.k
     R = corpus.adjacency.shape[1]
     # beam wider than the candidate list can never pop more than L entries
-    E = min(max(int(getattr(cfg, "beam_width", 1)), 1), L)
+    E = min(max(int(cfg.beam_width), 1), L)
     use_pq, do_et = cfg.use_pq, cfg.early_termination
     t_init = cfg.t_init if do_et else L
     t_step = cfg.t_step if do_et else L
@@ -677,8 +678,9 @@ def search_reference(
     def adist(ids):
         return _exact_dist(query, _rows(ids), metric)
 
+    cfg = upgrade_config(cfg)    # pre-beam pickled configs: fill defaults
     L, k = cfg.list_size, cfg.k
-    E = max(int(getattr(cfg, "beam_width", 1)), 1)
+    E = max(int(cfg.beam_width), 1)
 
     def _pass(u: int) -> bool:
         return node_mask is None or bool(node_mask[u])

@@ -76,28 +76,30 @@ class Observability:
             return NULL_OBS
         if isinstance(obj, cls):
             return obj
-        # configs.base.ObsConfig (duck-typed: no config import dependency;
-        # getattr defaults keep pre-quality pickled configs resolving)
+        # configs.base.ObsConfig (duck-typed match; the import stays local
+        # so the obs package keeps no top-level config dependency)
         if hasattr(obj, "metrics") and isinstance(obj.metrics, bool):
-            want_quality = bool(getattr(obj, "quality", False))
-            want_conv = bool(getattr(obj, "convergence", False))
-            if not (obj.metrics or obj.tracing or want_quality or want_conv):
+            from repro.configs.base import upgrade_config
+
+            # pre-quality pickled configs gain the newer fields here, with
+            # schema-owned defaults instead of per-site getattr fallbacks
+            obj = upgrade_config(obj)
+            if not (obj.metrics or obj.tracing or obj.quality
+                    or obj.convergence):
                 return NULL_OBS
             # the quality monitor publishes into the registry, so enabling
             # it implies a live registry even when metrics was left False
-            m = MetricsRegistry(enabled=obj.metrics or want_quality)
+            m = MetricsRegistry(enabled=obj.metrics or obj.quality)
             return cls(metrics=m,
                        tracer=Tracer(enabled=obj.tracing),
                        nand_billing=obj.nand_billing,
                        quality=QualityMonitor(
                            m,
-                           sample_rate=getattr(obj, "quality_sample_rate",
-                                               0.05),
-                           seed=getattr(obj, "quality_seed", 0))
-                       if want_quality else None,
-                       convergence=ConvergenceLog(
-                           getattr(obj, "convergence_capacity", 1 << 16))
-                       if want_conv else None)
+                           sample_rate=obj.quality_sample_rate,
+                           seed=obj.quality_seed)
+                       if obj.quality else None,
+                       convergence=ConvergenceLog(obj.convergence_capacity)
+                       if obj.convergence else None)
         raise TypeError(
             f"obs= takes an Observability, an ObsConfig or None, "
             f"got {type(obj).__name__}"

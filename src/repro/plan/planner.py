@@ -37,7 +37,9 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
 
-from repro.configs.base import FilterConfig, PlanConfig, SearchConfig
+from repro.configs.base import (
+    FilterConfig, PlanConfig, SearchConfig, upgrade_config,
+)
 from repro.filter.spec import FilterSpec
 from repro.obs import NULL_OBS, Observability
 from repro.plan.request import SearchRequest, SearchStats
@@ -401,7 +403,7 @@ class QueryPlanner:
                                     **common)
             # adaptive: combined filter ∧ ¬tombstone admission masks against
             # the LIVE tombstone set, regime re-decided like the kernel does
-            fcfg = getattr(mut.base.config, "filter", None) or FilterConfig()
+            fcfg = upgrade_config(mut.base.config).filter
             base_mask, ext_mask = mut.filter_masks(plan.spec)
             base_mask = np.asarray(base_mask, bool)
             n_pass = int(base_mask.sum())
@@ -552,6 +554,6 @@ class QueryPlanner:
             k=plan.cfg.k, kind=plan.kind, strategy=plan.strategy,
             selectivity=float(execution.selectivity),
             delta_candidates=float(execution.delta_candidates),
-            beam_width=int(getattr(plan.cfg, "beam_width", 1)),
+            beam_width=int(upgrade_config(plan.cfg).beam_width),
             num_tiles=plan.num_tiles, **counters,
         )

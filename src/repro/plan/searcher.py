@@ -157,14 +157,15 @@ class Searcher:
 
     @classmethod
     def _open_index(cls, index, pc, metric, attributes, obs):
-        scfg = cls._resolve_cfg(pc, index.config.search)
-        metric = metric or index.dataset.metric
-        fcfg = pc.filter or getattr(index.config, "filter", None) \
-            or FilterConfig()
         from repro.configs.base import upgrade_config
 
-        # pre-shard-layer pickled configs lack .shard; upgrade explicitly
-        shard_cfg = upgrade_config(index.config).shard
+        # pre-shard/filter-era pickled configs lack whole sections; upgrade
+        # once at the boundary, then read fields directly
+        cfg_full = upgrade_config(index.config)
+        scfg = cls._resolve_cfg(pc, cfg_full.search)
+        metric = metric or index.dataset.metric
+        fcfg = pc.filter or cfg_full.filter
+        shard_cfg = cfg_full.shard
         n_tiles = shard_cfg.num_tiles if pc.num_tiles is None else pc.num_tiles
         policy = shard_cfg.policy if pc.shard_policy is None \
             else pc.shard_policy
@@ -194,14 +195,14 @@ class Searcher:
 
     @classmethod
     def _open_mutable(cls, mutable, pc, metric, attributes, obs):
-        base = mutable.base
-        scfg = cls._resolve_cfg(pc, base.config.search)
-        metric = metric or base.dataset.metric
-        fcfg = pc.filter or getattr(base.config, "filter", None) \
-            or FilterConfig()
         from repro.configs.base import upgrade_config
 
-        shard_cfg = upgrade_config(base.config).shard
+        base = mutable.base
+        cfg_full = upgrade_config(base.config)
+        scfg = cls._resolve_cfg(pc, cfg_full.search)
+        metric = metric or base.dataset.metric
+        fcfg = pc.filter or cfg_full.filter
+        shard_cfg = cfg_full.shard
         probe = shard_cfg.probe_tiles if pc.probe_tiles is None \
             else pc.probe_tiles
         if attributes is not None:

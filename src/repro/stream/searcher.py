@@ -29,7 +29,7 @@ from typing import NamedTuple, Optional, Union
 
 import numpy as np
 
-from repro.configs.base import FilterConfig, SearchConfig
+from repro.configs.base import SearchConfig, upgrade_config
 from repro.core.search import SearchResult, graph_search
 
 
@@ -61,7 +61,8 @@ def merged_search_kernel(
     """Base + delta merge KERNEL — the ``merged`` execution spine of a
     ``repro.plan.QueryPlan`` (the admission mask depends on the live
     tombstone set, so the filter regime is re-decided here per call)."""
-    cfg = cfg or mutable.base.config.search
+    full_cfg = upgrade_config(mutable.base.config)
+    cfg = cfg or full_cfg.search
     k = cfg.k
     k_base = min(cfg.list_size, k + mutable.stream_cfg.base_overfetch)
     base_cfg = dataclasses.replace(cfg, k=k_base) if k_base != k else cfg
@@ -69,7 +70,7 @@ def merged_search_kernel(
     base_mask = ext_mask = None
     if filter_spec is not None and not getattr(filter_spec, "is_all", False):
         base_mask, ext_mask = mutable.filter_masks(filter_spec)
-    fcfg = getattr(mutable.base.config, "filter", None) or FilterConfig()
+    fcfg = full_cfg.filter
 
     q = np.atleast_2d(np.asarray(queries, np.float32))
     base_mode = "none" if base_mask is None else "traversal"

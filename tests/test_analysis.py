@@ -1,0 +1,439 @@
+"""proxlint (repro.analysis) test suite.
+
+Three layers:
+
+* **per-rule fixtures** — one positive + one negative source blob per rule,
+  where the positive encodes the historical bug pattern the rule exists to
+  prevent (PR5 static-args, PR6 wall-clock flush timeout, PR8 getattr
+  config shims), so a rule that silently stops firing breaks its fixture;
+* **machinery** — inline suppressions, baseline round-trip + stale
+  detection, the CLI gate exit codes;
+* **the tier-1 gate itself** — the pytest bridge runs the full suite over
+  ``src/`` + ``benchmarks/`` against the checked-in baseline and reports
+  every non-baselined finding as an individual test failure named
+  ``path:line [rule]``.
+"""
+import dataclasses
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.baseline import Baseline, BaselineEntry
+from repro.analysis.engine import FileContext, check_source
+from repro.analysis import pytest_bridge
+from repro.analysis.rules import ALL_RULES, get_rule
+from repro.analysis.rules.config_compat import ConfigForwardCompatRule
+from repro.analysis.rules.dtype_hygiene import DtypeHygieneRule
+from repro.analysis.rules.jit_static_args import JitStaticArgsRule
+from repro.analysis.rules.metric_names import MetricNameLiteralsRule
+from repro.analysis.rules.monotonic_clock import MonotonicClockRule
+from repro.analysis.rules.plan_hashability import PlanHashabilityRule
+from repro.analysis.rules.tracer_leak import TracerLeakRule
+from repro.analysis.rules.unreferenced import UnreferencedModuleRule
+
+_REPO = Path(__file__).resolve().parent.parent
+
+
+def _check(src, rule, rel="src/repro/serve/fixture.py"):
+    return check_source(textwrap.dedent(src), rel=rel, rules=[rule()])
+
+
+# ---------------------------------------------------------------------------
+# jit-static-args (the PR5 bug: distributed_search_kernel's axis-name
+# strings were threaded into the traced body without static_argnames)
+# ---------------------------------------------------------------------------
+
+_PR5_POSITIVE = """
+    import jax
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("mode",))
+    def kernel(x, mode, data_axis="data"):
+        if data_axis == "data":
+            return x + 1
+        return x
+"""
+
+
+def test_jit_static_args_fires_on_pr5_pattern():
+    found = _check(_PR5_POSITIVE, JitStaticArgsRule)
+    assert [f.rule for f in found] == ["jit-static-args"]
+    assert "data_axis" in found[0].message
+
+
+def test_jit_static_args_silent_on_fixed_code():
+    fixed = _PR5_POSITIVE.replace('("mode",)', '("mode", "data_axis")')
+    assert _check(fixed, JitStaticArgsRule) == []
+
+
+def test_jit_static_args_allows_is_none_pytree_checks():
+    src = """
+        import jax
+
+        @jax.jit
+        def f(x, mask=None):
+            if mask is None:
+                return x
+            return x * mask
+    """
+    assert _check(src, JitStaticArgsRule) == []
+
+
+# ---------------------------------------------------------------------------
+# plan-hashability (QueryPlan.cache_key batching identity: a frozen
+# dataclass with a list field constructs fine and explodes at first hash)
+# ---------------------------------------------------------------------------
+
+def test_plan_hashability_fires_on_list_field():
+    src = """
+        from dataclasses import dataclass
+        from typing import List, Optional
+
+        @dataclass(frozen=True)
+        class PlanKey:
+            k: int
+            tags: Optional[List[str]] = None
+    """
+    found = _check(src, PlanHashabilityRule)
+    assert [f.rule for f in found] == ["plan-hashability"]
+    assert "tags" in found[0].message
+
+
+def test_plan_hashability_silent_on_tuple_fields():
+    src = """
+        from dataclasses import dataclass
+        from typing import Optional, Tuple
+
+        @dataclass(frozen=True)
+        class PlanKey:
+            k: int
+            tags: Optional[Tuple[str, ...]] = None
+    """
+    assert _check(src, PlanHashabilityRule) == []
+
+
+# ---------------------------------------------------------------------------
+# monotonic-clock (the PR6 bug: the serving engine measured queue wait with
+# time.time(); an NTP step turned the flush timeout into an instant flush)
+# ---------------------------------------------------------------------------
+
+_CLOCK_POSITIVE = """
+    import time
+
+    def flush_due(t_submit):
+        return time.time() - t_submit
+"""
+
+
+def test_monotonic_clock_fires_in_serve_tree():
+    found = _check(_CLOCK_POSITIVE, MonotonicClockRule)
+    assert [f.rule for f in found] == ["monotonic-clock"]
+
+
+def test_monotonic_clock_silent_on_perf_counter():
+    fixed = _CLOCK_POSITIVE.replace("time.time()", "time.perf_counter()")
+    assert _check(fixed, MonotonicClockRule) == []
+
+
+def test_monotonic_clock_scoped_to_latency_trees():
+    # wall-clock timestamps outside serve/obs/plan/benchmarks are fine
+    assert _check(_CLOCK_POSITIVE, MonotonicClockRule,
+                  rel="src/repro/core/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# metric-name-literals (obs registry cells are keyed by name — a dynamic
+# name is an unbounded-cardinality leak)
+# ---------------------------------------------------------------------------
+
+def test_metric_names_fire_on_fstring():
+    src = """
+        def report(metrics, tenant):
+            metrics.counter(f"requests_{tenant}", 1)
+    """
+    found = _check(src, MetricNameLiteralsRule)
+    assert [f.rule for f in found] == ["metric-name-literals"]
+
+
+def test_metric_names_allow_literals_and_constants():
+    src = """
+        LATENCY = "serve_latency_us"
+
+        def report(metrics, tenant, us):
+            metrics.counter("requests_total", 1, tenant=tenant)
+            metrics.observe(LATENCY, us)
+    """
+    assert _check(src, MetricNameLiteralsRule) == []
+
+
+# ---------------------------------------------------------------------------
+# config-forward-compat (the PR8 contract: upgrade_config at the boundary,
+# never per-site getattr defaults)
+# ---------------------------------------------------------------------------
+
+def test_config_compat_fires_on_getattr_shim():
+    src = """
+        def width(cfg):
+            return int(getattr(cfg, "beam_width", 1))
+    """
+    found = _check(src, ConfigForwardCompatRule)
+    assert [f.rule for f in found] == ["config-forward-compat"]
+    assert "beam_width" in found[0].message
+
+
+def test_config_compat_allows_capability_probes_and_direct_reads():
+    src = """
+        from repro.configs.base import upgrade_config
+
+        def width(cfg, index):
+            attrs = getattr(index, "attributes", None)   # not config-shaped
+            return upgrade_config(cfg).beam_width, attrs
+    """
+    assert _check(src, ConfigForwardCompatRule) == []
+
+
+# ---------------------------------------------------------------------------
+# tracer-leak (Python control flow on traced values concretizes the tracer)
+# ---------------------------------------------------------------------------
+
+def test_tracer_leak_fires_on_python_branch():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            if y > 0:
+                return y
+            return -y
+    """
+    found = _check(src, TracerLeakRule)
+    assert [f.rule for f in found] == ["tracer-leak"]
+
+
+def test_tracer_leak_silent_on_where_shape_and_none_checks():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, m=None):
+            y = jnp.sum(x, axis=-1)
+            if m is None:          # pytree-structural: fine
+                m = jnp.ones_like(y)
+            if y.shape[0] > 1:     # static shape read: fine
+                y = y[:1]
+            return jnp.where(y > 0, y * m[:1], -y)
+    """
+    assert _check(src, TracerLeakRule) == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-hygiene (int32 node ids, no float64 into the kernel tree)
+# ---------------------------------------------------------------------------
+
+def test_dtype_hygiene_fires_in_core_tree():
+    src = """
+        import numpy as np
+
+        def build(n, dists):
+            ids = np.arange(n)
+            wide = dists.astype(np.float64)
+            return ids, wide
+    """
+    found = _check(src, DtypeHygieneRule, rel="src/repro/core/fixture.py")
+    assert [f.rule for f in found] == ["dtype-hygiene"] * 2
+    assert "ids" in found[0].message and "float64" in found[1].message
+
+
+def test_dtype_hygiene_silent_on_int32_ids_and_f32():
+    src = """
+        import numpy as np
+
+        def build(n, dists):
+            ids = np.arange(n, dtype=np.int32)
+            return ids, dists.astype(np.float32)
+    """
+    assert _check(src, DtypeHygieneRule,
+                  rel="src/repro/core/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# unreferenced-module (dead-code audit over the static import graph)
+# ---------------------------------------------------------------------------
+
+def _ctx(rel, src):
+    return FileContext(rel, rel, textwrap.dedent(src))
+
+
+def _project_findings(rule, ctxs):
+    rule.universe_dirs = ()          # fixture: no tests/ universe on disk
+    return list(rule.check_project(ctxs))
+
+
+def test_unreferenced_module_flags_dead_src_module():
+    found = _project_findings(UnreferencedModuleRule(), [
+        _ctx("benchmarks/bench.py", "import repro.alpha\n"),   # root
+        _ctx("src/repro/alpha.py", "from repro.beta import X\n"),
+        _ctx("src/repro/beta.py", "X = 1\n"),
+        _ctx("src/repro/gamma.py", "Y = 2\n"),                 # dead
+    ])
+    assert [f.path for f in found] == ["src/repro/gamma.py"]
+    # module-granularity baseline identity, stable under content edits
+    assert found[0].line_text == "module:repro.gamma"
+
+
+def test_unreferenced_module_exempts_cli_entry_points():
+    found = _project_findings(UnreferencedModuleRule(), [
+        _ctx("src/repro/tool.py",
+             'if __name__ == "__main__":\n    print("hi")\n'),
+    ])
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_line_suppression():
+    src = """
+        import time
+        t0 = time.time()  # proxlint: disable=monotonic-clock
+        t1 = time.time()
+    """
+    found = _check(src, MonotonicClockRule)
+    assert [f.line for f in found] == [4]   # only the unsuppressed line
+
+
+def test_file_suppression():
+    src = """
+        # proxlint: disable-file=monotonic-clock
+        import time
+        t0 = time.time()
+        t1 = time.time()
+    """
+    assert _check(src, MonotonicClockRule) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + stale detection
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip_and_stale(tmp_path):
+    findings = _check(_CLOCK_POSITIVE, MonotonicClockRule)
+    assert findings
+
+    bl = Baseline.from_findings(findings)
+    assert all(e.justification == "TODO: justify or fix" for e in bl.entries)
+    bl = Baseline([dataclasses.replace(e, justification="intentional: test")
+                   for e in bl.entries])
+    path = tmp_path / "baseline.json"
+    bl.save(str(path))
+    loaded = Baseline.load(str(path))
+    assert [e.key for e in loaded.entries] == [e.key for e in bl.entries]
+    assert loaded.entries[0].justification == "intentional: test"
+
+    # covered: same findings -> no new, no stale
+    new, covered, stale = loaded.split(findings)
+    assert not new and not stale and covered == findings
+
+    # the flagged line changes -> the entry goes stale (debt cannot
+    # outlive the code it excused)
+    fixed = _check(_CLOCK_POSITIVE.replace("time.time()",
+                                           "time.perf_counter()"),
+                   MonotonicClockRule)
+    new, covered, stale = loaded.split(fixed)
+    assert not new and not covered and stale == loaded.entries
+
+    # --update-baseline carries surviving justifications over
+    again = Baseline.from_findings(findings, old=loaded)
+    assert again.entries[0].justification == "intentional: test"
+
+
+# ---------------------------------------------------------------------------
+# CLI gate (exit codes CI relies on)
+# ---------------------------------------------------------------------------
+
+def test_cli_gate_exit_codes(tmp_path, monkeypatch, capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["check", "--list-rules"]) == 0
+
+    pkg = tmp_path / "src" / "repro" / "serve"
+    pkg.mkdir(parents=True)
+    bad = pkg / "engine.py"
+    bad.write_text("import time\nt0 = time.time()\n")
+    monkeypatch.chdir(tmp_path)
+
+    assert main(["check", "src"]) == 1                    # new findings
+    assert main(["check", "--update-baseline", "src"]) == 0
+    assert main(["check", "src"]) == 0                    # baselined
+    out = capsys.readouterr().out
+    assert "0 error(s)" in out
+
+    bad.write_text("import time\nt0 = time.perf_counter()\n")
+    assert main(["check", "src"]) == 1                    # stale entries
+
+
+# ---------------------------------------------------------------------------
+# pytest bridge: one failure per finding, named path:line [rule]
+# ---------------------------------------------------------------------------
+
+def test_bridge_reports_individual_failures_with_location(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "serve"
+    pkg.mkdir(parents=True)
+    (pkg / "engine.py").write_text("import time\nt0 = time.time()\n")
+
+    report = pytest_bridge.run([str(tmp_path / "src")], root=str(tmp_path))
+    params = dict(pytest_bridge.finding_params(report))
+    key = "src/repro/serve/engine.py:2 [monotonic-clock]"
+    assert key in params                       # one param per finding
+    assert "src/repro/serve/engine.py:2" in params[key]   # file:line in msg
+    assert "monotonic-clock" in params[key]
+
+
+def test_bridge_clean_tree_collects_sentinel(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "serve"
+    pkg.mkdir(parents=True)
+    (pkg / "engine.py").write_text("import time\nt0 = time.perf_counter()\n")
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    (bench / "bench.py").write_text("import repro.serve.engine\n")
+
+    report = pytest_bridge.run(
+        [str(tmp_path / "src"), str(bench)], root=str(tmp_path))
+    assert pytest_bridge.finding_params(report) == [(pytest_bridge.CLEAN,
+                                                     None)]
+
+
+# ---------------------------------------------------------------------------
+# registry sanity
+# ---------------------------------------------------------------------------
+
+def test_rule_registry_is_complete():
+    ids = [cls.id for cls in ALL_RULES]
+    assert len(ids) == len(set(ids))
+    for rule_id in ids:
+        assert get_rule(rule_id).id == rule_id
+    with pytest.raises(KeyError):
+        get_rule("no-such-rule")
+
+
+# ---------------------------------------------------------------------------
+# THE tier-1 gate: src/ + benchmarks/ against the checked-in baseline.
+# Each non-baselined finding (and each stale baseline entry) fails as its
+# own test, named path:line [rule].
+# ---------------------------------------------------------------------------
+
+_report = pytest_bridge.run(
+    [str(_REPO / "src"), str(_REPO / "benchmarks")], root=str(_REPO),
+    baseline_path=str(_REPO / "proxlint.baseline.json"))
+_PARAMS = pytest_bridge.finding_params(_report)
+
+
+@pytest.mark.parametrize("loc,message", _PARAMS, ids=[p[0] for p in _PARAMS])
+def test_repo_is_proxlint_clean(loc, message):
+    if message is not None:
+        pytest.fail(message)
